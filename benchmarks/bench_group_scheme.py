@@ -1,0 +1,31 @@
+"""Fig. 6 analogue: Group-Scheme variant selection on GOV2 d-gaps —
+decode/encode speed (scalar vs vectorized) and compression ratio for all 10
+CG x LD variants."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codec as codec_lib, group_scheme
+from .util import emit, gaps_and_tfs, mis, timeit
+
+
+def run(n: int = 1 << 18) -> None:
+    gaps, _ = gaps_and_tfs("gov2")
+    x = np.tile(gaps, -(-n // len(gaps)))[:n].astype(np.uint32)
+    for v in group_scheme.VARIANTS:
+        spec = codec_lib.get(f"group_scheme_{v}")
+        enc = spec.encode(x)
+        args = spec.jax_args(enc)
+        tv = timeit(lambda: spec.decode_jax_vec(**args))
+        ts = timeit(lambda: spec.decode_jax_scalar(**args))
+        te = timeit(lambda: spec.encode(x), repeats=3, warmup=1)
+        emit(f"gsc/{v}/decode_vec", tv * 1e6, f"{mis(n, tv):.0f}mis")
+        emit(f"gsc/{v}/decode_scalar", ts * 1e6, f"{mis(n, ts):.0f}mis")
+        emit(f"gsc/{v}/encode", te * 1e6, f"{mis(n, te):.0f}mis")
+        emit(f"gsc/{v}/ratio", 0.0, f"{enc.bits_per_int:.2f}bits/int")
+        emit(f"gsc/{v}/simd_speedup", 0.0, f"{ts / tv:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Table XI analogue: index sizes (posting-list bytes) per codec per dataset,
+VB fallback for short lists (paper §7.5)."""
+
+from __future__ import annotations
+
+from repro.data import synth
+from repro.index.invindex import InvertedIndex
+from .util import emit
+
+CODECS = ["gamma", "rice", "group_scheme_1-CU", "varbyte", "gvb", "g8cu",
+          "g8iu", "group_scheme_8-IU", "simple9", "simple16", "group_simple",
+          "packed_binary", "pfordelta", "afor", "group_afor", "group_pfd",
+          "group_optpfd", "bp128"]
+
+
+def run(datasets=("gov2", "clueweb09b", "wikipedia", "twitter")) -> None:
+    for ds in datasets:
+        doclen, postings = synth.make_corpus(ds)
+        raw = sum(len(d) * 8 for d, _ in postings.values())
+        emit(f"index_size/{ds}/uncompressed", 0.0, f"{raw/1e6:.2f}MB")
+        for name in CODECS:
+            idx = InvertedIndex.build(doclen, postings, codec=name)
+            emit(f"index_size/{ds}/{name}", 0.0, f"{idx.size_bytes()/1e6:.2f}MB")
+
+
+if __name__ == "__main__":
+    run()

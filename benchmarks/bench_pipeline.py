@@ -1,0 +1,43 @@
+"""Framework-integration benchmark: compressed stores (tokens / adjacency /
+recsys bags) — ratio + decode throughput; and the compressed gradient
+all-reduce wire-byte reduction (int8/int4 vs fp32)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import AdjacencyStore, BagStore, TokenStore
+from repro.models.sampler import CSRGraph
+from .util import emit, mis, timeit
+
+
+def run(n_tokens: int = 1 << 18) -> None:
+    rng = np.random.default_rng(5)
+    # LM token stream (zipf over vocab 49152)
+    toks = np.minimum(rng.zipf(1.2, n_tokens), 49151).astype(np.uint32)
+    for codec in ("bp128", "group_simple", "group_scheme_8-IU"):
+        st = TokenStore.build(toks, codec=codec)
+        t = timeit(lambda: st.read(0, n_tokens), repeats=3, warmup=1)
+        emit(f"pipeline/tokens/{codec}/decode", t * 1e6, f"{mis(n_tokens, t):.0f}mis")
+        emit(f"pipeline/tokens/{codec}/ratio", 0.0,
+             f"{st.compressed_bytes()/st.raw_bytes:.3f}of_raw")
+    # GNN adjacency (CSR, d-gapped columns)
+    g = CSRGraph.random(20000, 400000, 1)
+    for codec in ("group_pfd", "group_simple"):
+        st = AdjacencyStore.build(g.indptr, g.indices, codec=codec)
+        emit(f"pipeline/adjacency/{codec}/ratio", 0.0,
+             f"{st.compressed_bytes()/st.raw_bytes:.3f}of_raw")
+    # recsys multi-hot bags
+    bags = [rng.choice(1 << 20, size=rng.integers(10, 100), replace=False)
+            for _ in range(2000)]
+    st = BagStore.build(bags)
+    emit("pipeline/bags/group_scheme_8-IU/ratio", 0.0,
+         f"{st.compressed_bytes()/st.raw_bytes:.3f}of_raw")
+    # compressed all-reduce wire bytes (model, per DESIGN §3)
+    for bits in (8, 4):
+        emit(f"pipeline/grad_allreduce_int{bits}", 0.0,
+             f"{8.0/(2*bits/8.0):.1f}x_fewer_wire_bytes_vs_fp32_ring")
+
+
+if __name__ == "__main__":
+    run()

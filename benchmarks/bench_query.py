@@ -1,0 +1,41 @@
+"""Table X analogue: query processing rate (queries/second) per codec over
+the compressed inverted index (AND + OR BM25 top-10, warm cache)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import synth
+from repro.index.invindex import InvertedIndex
+from repro.index import query as Q
+from .util import emit, timeit
+
+CODECS = ["group_simple", "group_scheme_8-IU", "group_pfd", "bp128",
+          "group_afor", "varbyte", "simple9", "pfordelta", "afor", "gvb"]
+
+
+def run(n_queries: int = 100, dataset: str = "gov2") -> None:
+    doclen, postings = synth.make_corpus(dataset)
+    rng = np.random.default_rng(3)
+    terms = sorted(postings)
+    queries = [rng.choice(terms[:120], size=rng.integers(2, 4), replace=False).tolist()
+               for _ in range(n_queries)]
+    for name in CODECS:
+        idx = InvertedIndex.build(doclen, postings, codec=name)
+
+        def run_and():
+            for q in queries:
+                Q.and_query_scored(idx, q, k=10)
+
+        def run_or():
+            for q in queries[: n_queries // 4]:
+                Q.or_query(idx, q, k=10)
+
+        t = timeit(run_and, repeats=3, warmup=1)
+        emit(f"query/{dataset}/{name}/and", t * 1e6, f"{n_queries / t:.1f}qps")
+        t = timeit(run_or, repeats=3, warmup=1)
+        emit(f"query/{dataset}/{name}/or", t * 1e6, f"{(n_queries // 4) / t:.1f}qps")
+
+
+if __name__ == "__main__":
+    run()

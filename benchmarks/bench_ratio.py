@@ -1,0 +1,29 @@
+"""Tables VIII/IX analogue: compression ratio (bits per integer) per codec on
+the d-gap and TF streams of all four datasets."""
+
+from __future__ import annotations
+
+from repro.core import codec as codec_lib
+from .util import emit, gaps_and_tfs
+
+CODECS = ["rice", "gamma", "group_scheme_1-CU", "varbyte", "gvb", "g8iu",
+          "g8cu", "group_scheme_8-IU", "simple9", "simple16", "group_simple",
+          "packed_binary", "g_packed_binary", "bp128", "bp_tpu", "pfordelta",
+          "afor", "group_afor", "group_vse", "group_pfd", "group_optpfd"]
+
+
+def run(datasets=("gov2", "clueweb09b", "wikipedia", "twitter")) -> None:
+    for ds in datasets:
+        gaps, tfs = gaps_and_tfs(ds)
+        for sname, x in (("dgap", gaps), ("tf", tfs)):
+            for name in CODECS:
+                spec = codec_lib.get(name)
+                if x.max() >= 2 ** spec.max_bits:
+                    continue
+                enc = spec.encode(x)
+                emit(f"ratio/{ds}/{sname}/{name}", 0.0,
+                     f"{enc.bits_per_int:.2f}bits/int")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
+JSONs (see launch/dryrun.py + launch/hlo_census.py).  Prints one row per cell;
+the full table + analysis lives in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .util import emit
+
+PEAK_FLOPS = 197e12          # v5e bf16 / chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (1 link assumed per transfer)
+
+
+def load_records(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: dict):
+    c = rec.get("census") or {}
+    t_comp = c.get("flops_per_chip", 0) / PEAK_FLOPS
+    t_mem = c.get("mem_bytes_per_chip", 0) / HBM_BW
+    t_coll = c.get("wire_bytes_per_chip", 0) / ICI_BW
+    dom = max((("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+              key=lambda kv: kv[1])[0]
+    return t_comp, t_mem, t_coll, dom
+
+
+def run(out_dir: str = "experiments/dryrun") -> None:
+    for rec in load_records(out_dir):
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{'x'.join(map(str, rec['mesh']))}"
+        if rec.get("status") == "skipped":
+            emit(name, 0.0, "skipped:" + rec["skip_reason"][:40])
+            continue
+        if rec.get("status") != "ok":
+            emit(name, 0.0, "FAILED")
+            continue
+        t_comp, t_mem, t_coll, dom = terms(rec)
+        emit(name, max(t_comp, t_mem, t_coll) * 1e6,
+             f"comp={t_comp*1e3:.2f}ms|mem={t_mem*1e3:.2f}ms|coll={t_coll*1e3:.2f}ms|dom={dom}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Table VII analogue: decoding/encoding speed (million ints/second).
+
+Three decode implementations per Group codec map the paper's axis:
+  * np      — host oracle (reference point)
+  * scalar  — jax sequential scan (the paper's non-SIMD routine)
+  * vec     — jax vectorized (the paper's SIMD routine; XLA:CPU vectorizes
+    the shift/mask lanes, on TPU the same graph runs on the VPU)
+
+Scalar baselines (VarByte/GVB/Simple/PFD/...) decode via numpy; the
+bit-sequential ones (rice/gamma/g8iu) run python loops — their absolute mis
+is not comparable to C++, orderings are (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codec as codec_lib
+from .util import emit, gaps_and_tfs, mis, timeit
+
+GROUP_BENCH = ["group_simple", "group_scheme_1-CU", "group_scheme_8-IU",
+               "group_afor", "group_vse", "group_pfd", "group_optpfd", "bp128"]
+SCALAR_FAST = ["varbyte", "gvb", "g8cu", "simple9", "simple16", "pfordelta",
+               "afor", "packed_binary"]
+SCALAR_SLOW = ["rice", "gamma", "g8iu"]
+
+
+def run(n: int = 1 << 19, n_slow: int = 20000, datasets=("gov2", "clueweb09b"),
+        streams=("dgap", "tf")) -> None:
+    for ds in datasets:
+        gaps, tfs = gaps_and_tfs(ds)
+        for sname in streams:
+            base = gaps if sname == "dgap" else tfs
+            x = np.tile(base, -(-n // len(base)))[:n].astype(np.uint32)
+            xs = x[:n_slow]
+            for name in GROUP_BENCH:
+                spec = codec_lib.get(name)
+                enc = spec.encode(x)
+                args = spec.jax_args(enc)
+                t = timeit(lambda: spec.decode_jax_vec(**args))
+                emit(f"speed/{ds}/{sname}/{name}/decode_vec", t * 1e6,
+                     f"{mis(n, t):.0f}mis")
+                t = timeit(lambda: spec.decode_jax_scalar(**args))
+                emit(f"speed/{ds}/{sname}/{name}/decode_scalar", t * 1e6,
+                     f"{mis(n, t):.0f}mis")
+                t = timeit(lambda: spec.encode(x), repeats=3, warmup=1)
+                emit(f"speed/{ds}/{sname}/{name}/encode", t * 1e6,
+                     f"{mis(n, t):.0f}mis")
+            for name in SCALAR_FAST:
+                spec = codec_lib.get(name)
+                if x.max() >= 2 ** spec.max_bits:
+                    continue
+                enc = spec.encode(x)
+                t = timeit(lambda: spec.decode(enc), repeats=3, warmup=1)
+                emit(f"speed/{ds}/{sname}/{name}/decode_np", t * 1e6,
+                     f"{mis(n, t):.0f}mis")
+                t = timeit(lambda: spec.encode(x), repeats=3, warmup=1)
+                emit(f"speed/{ds}/{sname}/{name}/encode", t * 1e6,
+                     f"{mis(n, t):.0f}mis")
+            for name in SCALAR_SLOW:
+                spec = codec_lib.get(name)
+                if xs.max() >= 2 ** spec.max_bits:
+                    continue
+                enc = spec.encode(xs)
+                t = timeit(lambda: spec.decode(enc), repeats=2, warmup=1)
+                emit(f"speed/{ds}/{sname}/{name}/decode_np", t * 1e6,
+                     f"{mis(len(xs), t):.1f}mis")
+
+
+if __name__ == "__main__":
+    run()

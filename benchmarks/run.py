@@ -1,0 +1,48 @@
+"""Benchmark driver — one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses paper-scale
+stream lengths (slower); default sizes finish on a laptop-class CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: speed ratio gsc query index opt pipeline roofline")
+    args = ap.parse_args()
+    n = 1 << 21 if args.full else 1 << 18
+    suites = {
+        "ratio": lambda: __import__("benchmarks.bench_ratio", fromlist=["run"]).run(),
+        "gsc": lambda: __import__("benchmarks.bench_group_scheme", fromlist=["run"]).run(n=max(n >> 1, 1 << 16)),
+        "speed": lambda: __import__("benchmarks.bench_speed", fromlist=["run"]).run(n=n),
+        "opt": lambda: __import__("benchmarks.bench_optimizations", fromlist=["run"]).run(n=n),
+        "query": lambda: __import__("benchmarks.bench_query", fromlist=["run"]).run(
+            n_queries=200 if args.full else 60),
+        "index": lambda: __import__("benchmarks.bench_index_size", fromlist=["run"]).run(),
+        "pipeline": lambda: __import__("benchmarks.bench_pipeline", fromlist=["run"]).run(
+            n_tokens=max(n >> 1, 1 << 16)),
+        "roofline": lambda: __import__("benchmarks.bench_roofline", fromlist=["run"]).run(),
+    }
+    todo = args.only or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for key in todo:
+        try:
+            suites[key]()
+        except Exception:
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

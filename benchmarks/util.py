@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def timeit(fn, *args, repeats: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, (tuple, list)) and out and hasattr(out[0], "block_until_ready"):
+            out[0].block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def mis(n_ints: int, seconds: float) -> float:
+    """Million integers per second (the paper's speed metric)."""
+    return n_ints / seconds / 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def gaps_and_tfs(dataset: str, seed: int = 0):
+    from repro.data import synth
+    lists = synth.make_dataset(dataset, seed)
+    return synth.concat_gaps(lists), synth.concat_tfs(lists)

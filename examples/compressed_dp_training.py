@@ -1,0 +1,79 @@
+"""Compressed data-parallel training (paper technique -> collective term).
+
+Runs the DIN recsys model on 8 host devices with the int8/int4 compressed
+gradient all-reduce + error feedback, and compares the loss trajectory with
+the uncompressed fp32 baseline — wire bytes drop 4x/8x, convergence matches.
+
+  PYTHONPATH=src python examples/compressed_dp_training.py [--steps 30]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as PS  # noqa: E402
+
+from repro.configs import din  # noqa: E402
+from repro.models import recsys as R  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.runtime.trainer import make_compressed_dp_train_step  # noqa: E402
+
+
+def make_batch(cfg, rng, b):
+    hist = rng.integers(0, cfg.item_vocab, (b, cfg.seq_len))
+    target = rng.integers(0, cfg.item_vocab, b)
+    # learnable signal: label correlates with target id parity
+    label = ((target % 2) ^ (rng.random(b) < 0.1)).astype(np.int32)
+    return {
+        "target_item": jnp.asarray(target, jnp.int32),
+        "target_cate": jnp.asarray(target % cfg.cate_vocab, jnp.int32),
+        "hist_items": jnp.asarray(hist, jnp.int32),
+        "hist_cates": jnp.asarray(hist % cfg.cate_vocab, jnp.int32),
+        "hist_len": jnp.asarray(rng.integers(5, cfg.seq_len, b), jnp.int32),
+        "profile": jnp.asarray(rng.integers(0, cfg.profile_vocab, (b, cfg.n_profile)), jnp.int32),
+        "label": jnp.asarray(label, jnp.int32),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = din.make_smoke_config()
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=args.steps, weight_decay=0.0)
+    batch_specs = {k: PS("data") for k in make_batch(cfg, np.random.default_rng(0), 8)}
+
+    results = {}
+    for bits in (None, 8, 4):
+        params = R.init(cfg, jax.random.PRNGKey(0))
+        step, init_opt = make_compressed_dp_train_step(
+            lambda p, b: R.loss_fn(p, b, cfg), ocfg, mesh, batch_specs,
+            dp_axes=("data",), bits=bits)
+        step = jax.jit(step)
+        opt = init_opt(params)
+        rng = np.random.default_rng(1)
+        losses = []
+        for s in range(args.steps):
+            batch = make_batch(cfg, rng, args.batch)
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        results[bits] = losses
+        tag = "fp32" if bits is None else f"int{bits}+EF"
+        print(f"{tag:9}  loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    drop32 = results[None][0] - results[None][-1]
+    drop8 = results[8][0] - results[8][-1]
+    print(f"\nconvergence ratio int8/fp32: {drop8/max(drop32,1e-9):.2f} "
+          f"(1.0 = identical); wire bytes: int8 4x lower, int4 8x lower")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: train an LM on a COMPRESSED token store with the
+fault-tolerant loop (checkpoint/resume, straggler watchdog).
+
+Default --preset tiny trains a ~1M-param smollm-family model for 200 steps on
+CPU in a few minutes and asserts the loss decreases.  --preset full selects
+the real smollm-135m config (same code path; run it on real accelerators).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--preset tiny]
+  PYTHONPATH=src python examples/train_lm.py --resume   # continue from ckpt
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.configs import smollm_135m
+from repro.data.pipeline import TokenStore, lm_batch_iter
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import train_loop as TL
+from repro.runtime.trainer import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["tiny", "full"], default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--crash-at", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.preset == "full":
+        cfg = smollm_135m.make_config()
+    else:
+        cfg = dataclasses.replace(
+            smollm_135m.make_smoke_config(), n_layers=4, d_model=128, n_heads=4,
+            n_kv=2, head_dim=32, d_ff=512, vocab=2048)
+
+    # synthetic corpus stored COMPRESSED (bp128 blocks); loader decodes on the fly
+    rng = np.random.default_rng(0)
+    n_tok = args.batch * (args.seq + 1) * 64
+    # markov-ish stream so the model has something to learn
+    base = rng.integers(0, cfg.vocab // 4, n_tok).astype(np.uint32)
+    toks = np.where(rng.random(n_tok) < 0.7, np.roll(base, 1) % cfg.vocab, base)
+    store = TokenStore.build(toks.astype(np.uint32), codec="bp128")
+    print(f"token store: {store.compressed_bytes()/1e6:.2f} MB compressed "
+          f"({store.raw_bytes/1e6:.2f} MB raw)")
+
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} {n_params/1e6:.1f}M params")
+
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+
+    def loss_fn(p, batch):
+        return T.loss_fn(p, batch["tokens"], batch["labels"], cfg)
+
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    loop_cfg = TL.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                             ckpt_every=50, log_every=20, crash_at_step=args.crash_at)
+    params, opt, info = TL.run(step, params, adamw_init(params),
+                               lm_batch_iter(store, args.batch, args.seq), loop_cfg)
+    first = info["metrics"][0]["loss"] if info["metrics"] else float("nan")
+    last = info["metrics"][-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f}  (stragglers flagged: {len(info['stragglers'])})")
+    if args.preset == "tiny" and info["metrics"]:
+        assert last < first, "loss did not decrease"
+        print("OK: loss decreased on the compressed pipeline")
+
+
+if __name__ == "__main__":
+    main()

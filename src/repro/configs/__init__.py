@@ -1,0 +1,23 @@
+"""Architecture registry: the 10 assigned architectures (``--arch <id>``)."""
+
+from . import (deepseek_v2_lite_16b, dien, din, dlrm_rm2, egnn, mixtral_8x22b,
+               smollm_135m, starcoder2_3b, starcoder2_7b, wide_deep)
+
+ARCHS = {
+    m.ARCH.arch_id: m.ARCH
+    for m in (deepseek_v2_lite_16b, mixtral_8x22b, starcoder2_3b,
+              starcoder2_7b, smollm_135m, egnn, din, wide_deep, dlrm_rm2, dien)
+}
+
+
+def get(arch_id: str):
+    return ARCHS[arch_id]
+
+
+def all_cells(include_skipped: bool = True):
+    """Yield (arch_id, shape_name, cell) for the full 40-cell matrix."""
+    for aid, spec in ARCHS.items():
+        for sname, cell in spec.shapes.items():
+            if not include_skipped and cell.skip_reason:
+                continue
+            yield aid, sname, cell

@@ -1,0 +1,18 @@
+"""Core library: the paper's general SIMD compression approach in JAX.
+
+Public API:
+  codec.REGISTRY / codec.get / codec.names — all codecs (Table VI)
+  Encoded — compressed stream container with exact bit accounting
+  dgap — d-gap transform (paper §2.1.1)
+  layout — k-way vertical layout + quad-max (paper §3.1/§4.4)
+"""
+
+from . import (bits, bp128, bp_tpu, codec, dgap, frames, group_afor,
+               group_pfd, group_scheme, group_simple, group_vse, layout, scalar)
+from .encoded import Encoded
+
+__all__ = [
+    "bits", "bp128", "bp_tpu", "codec", "dgap", "frames", "group_afor",
+    "group_pfd", "group_scheme", "group_simple", "group_vse", "layout",
+    "scalar", "Encoded",
+]

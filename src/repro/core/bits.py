@@ -1,0 +1,163 @@
+"""Low-level bit utilities shared by every codec.
+
+numpy side: vectorized bit-stream writer/reader used by the (offline) encoders.
+jax side: effective-bit-width and masked shift helpers used by the decoders.
+
+Bit order convention (everywhere in this repo): LSB-first within a 32-bit word,
+words in increasing index order.  A value written at global bit offset ``o``
+occupies bits ``o .. o+len-1`` of the stream, i.e. bits ``o%32 ..`` of word
+``o//32`` upward.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# effective bit width
+# --------------------------------------------------------------------------- #
+
+
+def ebw_np(x: np.ndarray) -> np.ndarray:
+    """Effective bit width: minimum bits to represent x in binary. ebw(0) = 0."""
+    x = np.asarray(x, dtype=np.uint64)
+    # log2(x+1) is exact at powers of two in float64, and x+1 <= 2**32 is exact.
+    return np.ceil(np.log2(x.astype(np.float64) + 1.0)).astype(np.int32)
+
+
+def ebw_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    """Effective bit width in JAX via count-leading-zeros. ebw(0) = 0."""
+    x = x.astype(jnp.uint32)
+    return (32 - jax.lax.clz(x)).astype(jnp.int32)
+
+
+def mask_np(bw) -> np.ndarray:
+    """All-ones mask of bw bits as uint32 (bw may be an array; bw=32 handled)."""
+    bw = np.asarray(bw, dtype=np.uint64)
+    return ((np.uint64(1) << bw) - np.uint64(1)).astype(np.uint32)
+
+
+def mask_jnp(bw) -> jnp.ndarray:
+    bw = jnp.asarray(bw, dtype=jnp.uint32)
+    full = jnp.uint32(0xFFFFFFFF)
+    return jnp.where(bw >= 32, full, (jnp.uint32(1) << bw) - jnp.uint32(1))
+
+
+# --------------------------------------------------------------------------- #
+# vectorized bit-stream writer (numpy, encode side)
+# --------------------------------------------------------------------------- #
+
+
+def pack_bits_np(values: np.ndarray, lengths: np.ndarray) -> tuple[np.ndarray, int]:
+    """Concatenate variable-length codes into a uint32 word stream.
+
+    values[i] (< 2**lengths[i], lengths[i] <= 64) is written at bit offset
+    cumsum(lengths)[i-1].  Returns (words: uint32[ceil(total/32)], total_bits).
+    The lo<<bit / hi>>(64-bit) pair covers any code spanning two u64 words,
+    i.e. any length <= 64.
+    """
+    values = np.asarray(values, dtype=np.uint64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    if values.size == 0:
+        return np.zeros(0, dtype=np.uint32), 0
+    assert lengths.max(initial=0) <= 64, "pack_bits_np supports codes up to 64 bits"
+    ends = np.cumsum(lengths)
+    total = int(ends[-1])
+    offs = ends - lengths
+    nw64 = total // 64 + 2  # slack word for the hi-part scatter
+    buf = np.zeros(nw64, dtype=np.uint64)
+    word = (offs >> 6).astype(np.int64)
+    bit = (offs & 63).astype(np.uint64)
+    np.bitwise_or.at(buf, word, values << bit)
+    hi = np.where(bit == 0, np.uint64(0), values >> (np.uint64(64) - bit))
+    np.bitwise_or.at(buf, word + 1, hi)
+    words = buf.view(np.uint32)  # little-endian host assumed (x86/ARM)
+    return words[: (total + 31) // 32].copy(), total
+
+
+def gather_bits_np(words: np.ndarray, offs: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Read lengths[i] (<= 32) bits at bit offset offs[i] from a uint32 stream."""
+    words = np.asarray(words, dtype=np.uint32)
+    offs = np.asarray(offs, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.uint64)
+    w = np.concatenate([words, np.zeros(2, dtype=np.uint32)])
+    word = offs >> 5
+    bit = (offs & 31).astype(np.uint64)
+    lo = w[word].astype(np.uint64)
+    hi = w[word + 1].astype(np.uint64)
+    v = ((lo | (hi << np.uint64(32))) >> bit)
+    msk = np.where(lengths >= 64, ~np.uint64(0), (np.uint64(1) << lengths) - np.uint64(1))
+    return (v & msk).astype(np.uint32)
+
+
+# --------------------------------------------------------------------------- #
+# vectorized bit gather (jax, decode side)
+# --------------------------------------------------------------------------- #
+
+
+def gather_bits_jnp(words: jnp.ndarray, offs: jnp.ndarray, bws: jnp.ndarray) -> jnp.ndarray:
+    """JAX analogue of gather_bits_np: read bws[i] (<=32) bits at offs[i].
+
+    words: uint32[W] (caller must pad with >=1 slack word), offs: int32, bws: int32.
+    """
+    word = (offs >> 5).astype(jnp.int32)
+    bit = (offs & 31).astype(jnp.uint32)
+    lo = words[word]
+    hi = words[word + 1]
+    # (lo | hi<<32) >> bit, in two 32-bit halves to stay in uint32 lanes (TPU
+    # has no 64-bit lanes): lo>>bit | hi<<(32-bit), guarding the bit==0 case.
+    lo_part = jnp.right_shift(lo, bit)
+    hi_part = jnp.where(bit == 0, jnp.uint32(0), jnp.left_shift(hi, jnp.uint32(32) - bit))
+    return (lo_part | hi_part) & mask_jnp(bws)
+
+
+# --------------------------------------------------------------------------- #
+# unary helpers (Rice / Gamma / unary length descriptors)
+# --------------------------------------------------------------------------- #
+
+
+def unary_stream_np(counts: np.ndarray) -> tuple[np.ndarray, int]:
+    """Encode counts[i] >= 1 as (counts[i]-1) one-bits + one zero-bit, LSB-first.
+
+    Returns (words uint32, total_bits).  Vectorized: the stream is all-ones with
+    zeros at positions cumsum(counts)-1.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.uint32), 0
+    nw = (total + 31) // 32
+    bits = np.ones(nw * 32, dtype=np.uint8)
+    zpos = np.cumsum(counts) - 1
+    bits[zpos] = 0
+    bits[total:] = 0  # pad with zeros past the end
+    words = np.packbits(bits.reshape(-1, 32)[:, ::-1], axis=1, bitorder="big")
+    words = words[:, ::-1].copy().view(np.uint32).reshape(-1)
+    return words, total
+
+
+def unary_decode_np(words: np.ndarray, total_bits: int, n: int) -> np.ndarray:
+    """Decode the first n unary counts from a stream produced by unary_stream_np."""
+    words = np.asarray(words, dtype=np.uint32)
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little")[:total_bits]
+    zpos = np.flatnonzero(bits == 0)[:n]
+    prev = np.concatenate([[-1], zpos[:-1]])
+    return (zpos - prev).astype(np.int64)
+
+
+def bits_to_words_np(bits: np.ndarray) -> np.ndarray:
+    """uint8 bit array (LSB-first stream order) -> uint32 words."""
+    pad = (-len(bits)) % 32
+    if pad:
+        bits = np.concatenate([bits, np.zeros(pad, dtype=np.uint8)])
+    by = np.packbits(bits, bitorder="little")
+    padb = (-len(by)) % 4
+    if padb:
+        by = np.concatenate([by, np.zeros(padb, dtype=np.uint8)])
+    return by.view(np.uint32)
+
+
+def words_to_bits_np(words: np.ndarray, total_bits: int) -> np.ndarray:
+    return np.unpackbits(np.asarray(words, np.uint32).view(np.uint8), bitorder="little")[:total_bits]

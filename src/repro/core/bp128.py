@@ -1,0 +1,77 @@
+"""(SIMD-)BP128 and Group-PackedBinary as special cases of the approach (§6.3).
+
+BP128: fixed frames of 128 integers (32 quadruples), one 8-bit bw header per
+frame, 4-way vertical layout.  Group-PackedBinary: same with 512-integer
+frames (the paper's PackedBinary experimental setting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bits import ebw_np
+from .encoded import Encoded
+from .frames import pack_data, quads_of, unpack_data_jnp, unpack_data_np, unpack_data_scalar_jnp
+from .layout import quadmax_np
+
+
+def encode(x: np.ndarray, frame_quads: int = 32, name: str = "bp128") -> Encoded:
+    x = np.asarray(x, dtype=np.uint32)
+    n = len(x)
+    if n == 0:
+        return Encoded(name, 0, np.zeros(0, np.uint8), np.zeros(0, np.uint32),
+                       header_bits=32, meta={"Q": 0, "frame_quads": frame_quads})
+    v = quads_of(x)
+    qm = quadmax_np(x, 4, pseudo=True)
+    e = ebw_np(qm)
+    q = len(qm)
+    nf = (q + frame_quads - 1) // frame_quads
+    epad = np.concatenate([e, np.zeros(nf * frame_quads - q, np.int32)])
+    bws = np.maximum(epad.reshape(nf, frame_quads).max(axis=1), 1).astype(np.int32)
+    bw_quads = np.repeat(bws, frame_quads)[:q]
+    data, dbits = pack_data(v, bw_quads)
+    return Encoded(
+        name, n, bws.astype(np.uint8), data.reshape(-1),
+        control_bits=nf * 8, data_bits=dbits * 4, header_bits=32,
+        meta={"Q": q, "frame_quads": frame_quads},
+    )
+
+
+def encode_packed_binary(x: np.ndarray) -> Encoded:
+    return encode(x, frame_quads=128, name="g_packed_binary")
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    if enc.n == 0:
+        return np.zeros(0, np.uint32)
+    q = enc.meta["Q"]
+    bw_quads = np.repeat(enc.control.astype(np.int32), enc.meta["frame_quads"])[:q]
+    return unpack_data_np(enc.data.reshape(-1, 4), bw_quads, enc.n)
+
+
+def jax_args(enc: Encoded) -> dict:
+    data = enc.data.reshape(-1, 4)
+    data = np.concatenate([data, np.zeros((1, 4), np.uint32)])
+    return {
+        "control": jnp.asarray(enc.control.astype(np.int32)),
+        "data": jnp.asarray(data),
+        "n": enc.n,
+        "q": enc.meta["Q"],
+        "frame_quads": enc.meta["frame_quads"],
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q", "frame_quads"))
+def decode_jax_vec(control, data, n: int, q: int, frame_quads: int):
+    bw_quads = jnp.repeat(control, frame_quads, total_repeat_length=max(q, 1))
+    return unpack_data_jnp(data, bw_quads, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q", "frame_quads"))
+def decode_jax_scalar(control, data, n: int, q: int, frame_quads: int):
+    bw_quads = jnp.repeat(control, frame_quads, total_repeat_length=max(q, 1))
+    return unpack_data_scalar_jnp(data, bw_quads, n, q)

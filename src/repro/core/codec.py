@@ -1,0 +1,105 @@
+"""Uniform codec registry (Table VI of the paper).
+
+Each entry exposes:
+  encode(np.uint32[N]) -> Encoded
+  decode(Encoded) -> np.uint32[N]          (numpy oracle)
+and, for the Group family, JAX decoders:
+  jax_args(Encoded) -> kwargs
+  decode_jax_scalar(**kwargs), decode_jax_vec(**kwargs)
+where "scalar" mirrors the paper's sequential non-SIMD routine and "vec" the
+SIMD-vectorized one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import bp128, group_afor, group_pfd, group_scheme, group_simple, scalar
+from .encoded import Encoded
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    name: str
+    category: str                  # bit | byte | word | frame
+    encode: Callable[[np.ndarray], Encoded]
+    decode: Callable[[Encoded], np.ndarray]
+    jax_args: Optional[Callable] = None
+    decode_jax_scalar: Optional[Callable] = None
+    decode_jax_vec: Optional[Callable] = None
+    max_bits: int = 32             # values above 2**max_bits-1 unsupported
+    is_group: bool = False         # uses the paper's Group approach
+
+
+REGISTRY: dict[str, CodecSpec] = {}
+
+
+def _reg(spec: CodecSpec) -> None:
+    REGISTRY[spec.name] = spec
+
+
+# ---- scalar baselines ------------------------------------------------------ #
+_reg(CodecSpec("varbyte", "byte", scalar.vb_encode, scalar.vb_decode))
+_reg(CodecSpec("gvb", "byte", scalar.gvb_encode, scalar.gvb_decode))
+_reg(CodecSpec("g8iu", "byte", scalar.g8iu_encode, scalar.g8iu_decode))
+_reg(CodecSpec("g8cu", "byte", scalar.g8cu_encode, scalar.g8cu_decode))
+_reg(CodecSpec("simple9", "word", scalar.simple9_encode, scalar.simple9_decode, max_bits=28))
+_reg(CodecSpec("simple16", "word", scalar.simple16_encode, scalar.simple16_decode, max_bits=28))
+_reg(CodecSpec("rice", "bit", scalar.rice_encode, scalar.rice_decode))
+_reg(CodecSpec("gamma", "bit", scalar.gamma_encode, scalar.gamma_decode, max_bits=31))
+_reg(CodecSpec("pfordelta", "frame", scalar.pfd_encode, scalar.pfd_decode))
+_reg(CodecSpec("afor", "frame", scalar.afor_encode, scalar.afor_decode))
+_reg(CodecSpec("packed_binary", "frame", scalar.packedbinary_encode, scalar.packedbinary_decode))
+
+# ---- Group family (this paper) --------------------------------------------- #
+_reg(CodecSpec("group_simple", "word", group_simple.encode, group_simple.decode_np,
+               group_simple.jax_args, group_simple.decode_jax_scalar,
+               group_simple.decode_jax_vec, is_group=True))
+
+for v in group_scheme.VARIANTS:
+    _reg(CodecSpec(
+        f"group_scheme_{v}", "bit" if int(v.split("-")[0]) < 8 else "byte",
+        functools.partial(group_scheme.encode, variant=v), group_scheme.decode_np,
+        group_scheme.jax_args, group_scheme.decode_jax_scalar,
+        group_scheme.decode_jax_vec, is_group=True))
+
+_reg(CodecSpec("group_afor", "frame", group_afor.encode, group_afor.decode_np,
+               group_afor.jax_args, group_afor.decode_jax_scalar,
+               group_afor.decode_jax_vec, is_group=True))
+
+from . import group_vse  # noqa: E402
+_reg(CodecSpec("group_vse", "frame", group_vse.encode, group_vse.decode_np,
+               group_vse.jax_args, group_vse.decode_jax_scalar,
+               group_vse.decode_jax_vec, is_group=True))
+_reg(CodecSpec("group_pfd", "frame", group_pfd.encode, group_pfd.decode_np,
+               group_pfd.jax_args, group_pfd.decode_jax_scalar,
+               group_pfd.decode_jax_vec, is_group=True))
+_reg(CodecSpec("group_optpfd", "frame", functools.partial(group_pfd.encode, opt=True),
+               group_pfd.decode_np, group_pfd.jax_args, group_pfd.decode_jax_scalar,
+               group_pfd.decode_jax_vec, is_group=True))
+_reg(CodecSpec("bp128", "frame", bp128.encode, bp128.decode_np,
+               bp128.jax_args, bp128.decode_jax_scalar, bp128.decode_jax_vec, is_group=True))
+
+from . import bp_tpu  # noqa: E402  (imports kernels; kept after core codecs)
+_reg(CodecSpec("bp_tpu", "frame", bp_tpu.encode, bp_tpu.decode_np, is_group=True))
+_reg(CodecSpec("g_packed_binary", "frame", bp128.encode_packed_binary, bp128.decode_np,
+               bp128.jax_args, bp128.decode_jax_scalar, bp128.decode_jax_vec, is_group=True))
+
+
+def get(name: str) -> CodecSpec:
+    return REGISTRY[name]
+
+
+def names(category: str | None = None, group_only: bool = False) -> list[str]:
+    out = []
+    for k, s in REGISTRY.items():
+        if category and s.category != category:
+            continue
+        if group_only and not s.is_group:
+            continue
+        out.append(k)
+    return out

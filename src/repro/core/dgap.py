@@ -1,0 +1,26 @@
+"""d-gap (delta) transform for strictly/weakly increasing integer sequences.
+
+Paper §2.1.1: postings are docid-sorted; d-gap replaces d_i with d_i - d_{i-1}
+(first element kept raw).  Decoding is an inclusive prefix sum — on TPU this is
+the ``kernels/scan_add`` hot spot; here are the host and pure-jnp versions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def dgap_encode_np(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.uint32)
+    out = x.copy()
+    out[1:] = x[1:] - x[:-1]
+    return out
+
+
+def dgap_decode_np(g: np.ndarray) -> np.ndarray:
+    return np.cumsum(np.asarray(g, dtype=np.uint64)).astype(np.uint32)
+
+
+def dgap_decode_jnp(g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(g.astype(jnp.uint32), dtype=jnp.uint32)

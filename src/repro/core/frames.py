@@ -1,0 +1,72 @@
+"""Shared machinery for the frame-based Group codecs (paper §6).
+
+A frame codec assigns one bit width to a *run of quadruples*; after expanding
+per-frame headers to a per-quad bit-width array, packing/unpacking is identical
+for Group-AFOR, Group-PFD, (SIMD-)BP128 and Group-PackedBinary: four vertical
+component bitstreams, values of bw[q] bits at offset cumsum(bw)[q-1].
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bits import gather_bits_np, mask_jnp, mask_np, pack_bits_np
+from .layout import to_vertical_np
+
+
+def pack_data(v: np.ndarray, bw: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pack (Q, 4) ints with bw[q] bits per value into a (W, 4) word array."""
+    bw = np.asarray(bw, dtype=np.int64)
+    msk = mask_np(bw).astype(np.uint64)
+    cols, total = [], 0
+    for c in range(4):
+        w, total = pack_bits_np(v[:, c].astype(np.uint64) & msk, bw)
+        cols.append(w)
+    if total == 0:
+        return np.zeros((0, 4), np.uint32), 0
+    return np.stack(cols, axis=1), total
+
+
+def unpack_data_np(data: np.ndarray, bw: np.ndarray, n: int) -> np.ndarray:
+    bw = np.asarray(bw, dtype=np.int64)
+    ends = np.cumsum(bw)
+    offs = ends - bw
+    out = np.stack([gather_bits_np(data[:, c], offs, bw) for c in range(4)], axis=1)
+    return out.reshape(-1)[:n]
+
+
+def unpack_data_jnp(data: jnp.ndarray, bw: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Vectorized unpack: data (W+1, 4) with slack row, bw (Q,) int32."""
+    bw = bw.astype(jnp.uint32)
+    ends = jnp.cumsum(bw)
+    offs = (ends - bw).astype(jnp.int32)
+    word = offs >> 5
+    bit = (offs & 31).astype(jnp.uint32)[:, None]
+    lo = data[word]
+    hi = data[word + 1]
+    val = jnp.right_shift(lo, bit) | jnp.where(
+        bit == 0, jnp.uint32(0), jnp.left_shift(hi, jnp.uint32(32) - bit))
+    return (val & mask_jnp(bw)[:, None]).reshape(-1)[:n]
+
+
+def unpack_data_scalar_jnp(data: jnp.ndarray, bw: jnp.ndarray, n: int, q: int) -> jnp.ndarray:
+    """Scalar unpack: one quadruple per scan step (paper's non-SIMD decode)."""
+
+    def step(pos, bwq):
+        bwq = bwq.astype(jnp.uint32)
+        w = pos >> 5
+        b = (pos & 31).astype(jnp.uint32)
+        lo = data[w]
+        hi = jnp.where(b == 0, jnp.zeros(4, jnp.uint32),
+                       jnp.left_shift(data[w + 1], jnp.uint32(32) - b))
+        vals = (jnp.right_shift(lo, b) | hi) & mask_jnp(bwq)
+        return pos + bwq.astype(jnp.int32), vals
+
+    _, vals = jax.lax.scan(step, jnp.int32(0), bw[:q].astype(jnp.int32))
+    return vals.reshape(-1)[:n]
+
+
+def quads_of(x: np.ndarray) -> np.ndarray:
+    return to_vertical_np(np.asarray(x, np.uint32), 4)

@@ -1,0 +1,127 @@
+"""Group-AFOR (paper §6.1): adaptive frames over the quad max array.
+
+Frame sizes {32, 64, 128} integers = {8, 16, 32} quadruples.  The optimal
+partition minimizes total bits via dynamic programming on the quad max array
+(boundaries land on 8-quad blocks because all sizes are multiples of 8).
+Header: 1 byte per frame = 2-bit size code + 6-bit bit width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bits import ebw_np
+from .encoded import Encoded
+from .frames import pack_data, quads_of, unpack_data_jnp, unpack_data_np, unpack_data_scalar_jnp
+from .layout import quadmax_np
+
+SIZES_Q = np.array([8, 16, 32])          # frame sizes in quadruples
+HEADER_BITS = 8
+
+
+def _partition(qm_ebw: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """DP partition -> (sizes_in_quads, bw) per frame."""
+    q = len(qm_ebw)
+    nb = (q + 7) // 8
+    e = np.concatenate([qm_ebw, np.zeros(nb * 8 - q, np.int32)])
+    bmax1 = e.reshape(-1, 8).max(axis=1)                       # max over 1 block
+    bmax2 = np.maximum(bmax1[:-1], bmax1[1:]) if nb > 1 else np.zeros(0, np.int32)
+    bmax4 = (np.maximum(bmax2[:-2], bmax2[2:]) if nb > 3 else np.zeros(0, np.int32))
+    bmax1 = np.maximum(bmax1, 1)  # a frame of all zeros still needs bw >= 1
+    dp = np.zeros(nb + 1, dtype=np.int64)
+    choice = np.zeros(nb, dtype=np.int8)
+    for i in range(nb - 1, -1, -1):
+        best = HEADER_BITS + 32 * 1 * int(bmax1[i]) + dp[i + 1]
+        ch = 0
+        if i + 2 <= nb:
+            c = HEADER_BITS + 32 * 2 * int(max(bmax2[i], 1)) + dp[i + 2]
+            if c < best:
+                best, ch = c, 1
+        if i + 4 <= nb:
+            c = HEADER_BITS + 32 * 4 * int(max(bmax4[i], 1)) + dp[i + 4]
+            if c < best:
+                best, ch = c, 2
+        dp[i] = best
+        choice[i] = ch
+    sizes, bws = [], []
+    i = 0
+    while i < nb:
+        ch = int(choice[i])
+        nblocks = (1, 2, 4)[ch]
+        sizes.append(nblocks * 8)
+        if ch == 0:
+            bws.append(int(bmax1[i]))
+        elif ch == 1:
+            bws.append(int(max(bmax2[i], 1)))
+        else:
+            bws.append(int(max(bmax4[i], 1)))
+        i += nblocks
+    return np.asarray(sizes, np.int32), np.asarray(bws, np.int32)
+
+
+def encode(x: np.ndarray) -> Encoded:
+    x = np.asarray(x, dtype=np.uint32)
+    n = len(x)
+    if n == 0:
+        return Encoded("group_afor", 0, np.zeros(0, np.uint8), np.zeros(0, np.uint32),
+                       header_bits=32, meta={"Q": 0})
+    v = quads_of(x)
+    qm = quadmax_np(x, 4, pseudo=True)
+    e = ebw_np(qm)
+    sizes, bws = _partition(e)
+    q = len(qm)
+    bw_quads = np.repeat(bws, sizes)[:q]  # DP padded to 8-quad blocks; trim
+    # tail frame may extend past Q; packing uses only the first Q quads
+    data, dbits = pack_data(v, bw_quads)
+    size_code = np.searchsorted(SIZES_Q, sizes).astype(np.uint8)
+    control = (size_code | (bws.astype(np.uint8) << 2))
+    return Encoded(
+        "group_afor", n, control, data.reshape(-1),
+        control_bits=len(control) * 8, data_bits=dbits * 4, header_bits=32,
+        meta={"Q": q, "sizes": sizes, "bws": bws},
+    )
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    if enc.n == 0:
+        return np.zeros(0, np.uint32)
+    q = enc.meta["Q"]
+    sizes = (enc.control & 3).astype(np.int64)
+    sizes = SIZES_Q[sizes]
+    bws = (enc.control >> 2).astype(np.int32)
+    bw_quads = np.repeat(bws, sizes)[:q]
+    return unpack_data_np(enc.data.reshape(-1, 4), bw_quads, enc.n)
+
+
+def jax_args(enc: Encoded) -> dict:
+    data = enc.data.reshape(-1, 4)
+    data = np.concatenate([data, np.zeros((1, 4), np.uint32)])
+    return {
+        "control": jnp.asarray(enc.control.astype(np.int32)),
+        "data": jnp.asarray(data),
+        "n": enc.n,
+        "q": enc.meta["Q"],
+    }
+
+
+SIZES_J = jnp.asarray(SIZES_Q)
+
+
+def _bw_quads(control: jnp.ndarray, q: int) -> jnp.ndarray:
+    sizes = SIZES_J[control & 3]
+    bws = (control >> 2).astype(jnp.int32)
+    return jnp.repeat(bws, sizes, total_repeat_length=max(q, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q"))
+def decode_jax_vec(control, data, n: int, q: int):
+    return unpack_data_jnp(data, _bw_quads(control, q), n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q"))
+def decode_jax_scalar(control, data, n: int, q: int):
+    return unpack_data_scalar_jnp(data, _bw_quads(control, q), n, q)

@@ -1,0 +1,322 @@
+"""Group-Scheme family (paper §5): CG x LD generalization of Elias Gamma / GVB.
+
+A variant is "CG-LD" with compression granularity CG in {1,2,4,8} bits and
+length descriptor LD in {B (binary), CU (complete unary), IU (incomplete
+unary, CG in {4,8} only)}.  "1-CU" is k-Gamma (k=4).
+
+Per quadruple q: nunits[q] = max(1, ceil(ebw(quadmax[q]) / CG)); the four
+integers are packed with bw = nunits*CG bits each into the four vertical
+component bitstreams of the data area (values may cross word boundaries —
+Fig. 4).  The control area stores the length descriptors:
+
+  * B  — nunits-1 in a fixed-width field, alignment per Fig. 5:
+         CG=1: 3 x 5-bit fields per 16 bits; CG=2: 2 x 4-bit per byte;
+         CG=4: 2 x 3-bit per byte; CG=8: 4 x 2-bit per byte.
+  * CU — unary (nunits-1 ones + a zero), continuous across bytes.
+  * IU — unary, never crossing a byte; a byte's trailing ones are padding.
+
+Decoders: numpy oracle, JAX scalar (sequential scan, TZCNT-style unary reads —
+paper §5.4), JAX vectorized (packed LD decode via zero-position arithmetic /
+256-entry lookup tables — paper §5.3.1 — then one gather-shift-mask for all
+quadruples at once — §5.3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bits import ebw_np, gather_bits_jnp, mask_jnp, mask_np, pack_bits_np, unary_stream_np, words_to_bits_np
+from .encoded import Encoded
+from .layout import to_vertical_np, quadmax_np
+
+CGS = (1, 2, 4, 8)
+# binary-LD layout per CG: (quads per group, field bits, group bits)
+B_LAYOUT = {1: (3, 5, 16), 2: (2, 4, 8), 4: (2, 3, 8), 8: (4, 2, 8)}
+VARIANTS = tuple(f"{cg}-B" for cg in CGS) + tuple(f"{cg}-CU" for cg in CGS) + ("4-IU", "8-IU")
+
+
+def _split(variant: str) -> tuple[int, str]:
+    cg, ld = variant.split("-")
+    return int(cg), ld
+
+
+# --------------------------------------------------------------------------- #
+# incomplete-unary lookup tables (paper §5.3.1): decode a whole control byte
+# --------------------------------------------------------------------------- #
+
+
+def _build_iu_tables() -> tuple[np.ndarray, np.ndarray]:
+    count = np.zeros(256, np.int32)
+    lds = np.zeros((256, 8), np.int32)
+    for b in range(256):
+        k, pos = 0, 0
+        run = 0
+        while pos < 8:
+            if (b >> pos) & 1:
+                run += 1
+            else:
+                lds[b, k] = run + 1
+                k += 1
+                run = 0
+            pos += 1
+        count[b] = k  # trailing ones (run > 0 at exit) are padding
+    return count, lds
+
+
+IU_COUNT_NP, IU_LDS_NP = _build_iu_tables()
+IU_COUNT_J = jnp.asarray(IU_COUNT_NP)
+IU_LDS_J = jnp.asarray(IU_LDS_NP)
+
+
+# --------------------------------------------------------------------------- #
+# encoding (host / numpy)
+# --------------------------------------------------------------------------- #
+
+
+def _nunits(x: np.ndarray, cg: int) -> np.ndarray:
+    qm = quadmax_np(x, 4, pseudo=True)
+    e = ebw_np(qm)
+    return np.maximum(1, -(-e // cg)).astype(np.int64)
+
+
+def _encode_control(nunits: np.ndarray, cg: int, ld: str) -> tuple[np.ndarray, int, dict]:
+    if ld == "B":
+        gsz, fb, gb = B_LAYOUT[cg]
+        q = len(nunits)
+        pad = (-q) % gsz
+        f = np.concatenate([nunits - 1, np.zeros(pad, np.int64)]).reshape(-1, gsz)
+        group_vals = np.zeros(len(f), np.uint64)
+        for i in range(gsz):
+            group_vals |= f[:, i].astype(np.uint64) << np.uint64(i * fb)
+        words, bits = pack_bits_np(group_vals, np.full(len(f), gb, np.int64))
+        return words, bits, {}
+    if ld == "CU":
+        words, bits = unary_stream_np(nunits)
+        return words, bits, {}
+    # IU: greedy byte fill, codes never cross bytes
+    out_bytes = []
+    cur, used = 0, 0
+    for u in nunits:
+        u = int(u)
+        if used + u > 8:
+            cur |= ((1 << (8 - used)) - 1) << used  # pad remainder with ones
+            out_bytes.append(cur)
+            cur, used = 0, 0
+        cur |= ((1 << (u - 1)) - 1) << used          # u-1 ones then an implicit 0
+        used += u
+        if used == 8:
+            out_bytes.append(cur)
+            cur, used = 0, 0
+    if used:
+        cur |= ((1 << (8 - used)) - 1) << used
+        out_bytes.append(cur)
+    by = np.asarray(out_bytes, dtype=np.uint8)
+    padb = (-len(by)) % 4
+    words = np.concatenate([by, np.zeros(padb, np.uint8)]).view(np.uint32)
+    return words, len(by) * 8, {"n_control_bytes": len(by)}
+
+
+def encode(x: np.ndarray, variant: str) -> Encoded:
+    cg, ld = _split(variant)
+    assert variant in VARIANTS, variant
+    x = np.asarray(x, dtype=np.uint32)
+    n = len(x)
+    name = f"group_scheme_{variant}"
+    if n == 0:
+        return Encoded(name, 0, np.zeros(0, np.uint32), np.zeros(0, np.uint32),
+                       header_bits=32, meta={"variant": variant, "Q": 0})
+    v = to_vertical_np(x, 4)                       # (Q, 4)
+    nunits = _nunits(x, cg)                        # (Q,)
+    bw = (nunits * cg).astype(np.int64)
+    control, cbits, cmeta = _encode_control(nunits, cg, ld)
+    msk = mask_np(bw).astype(np.uint64)
+    cols = []
+    for c in range(4):
+        w, dbits = pack_bits_np(v[:, c].astype(np.uint64) & msk, bw)
+        cols.append(w)
+    data = np.stack(cols, axis=1)                  # (W, 4)
+    meta = {"variant": variant, "Q": len(nunits), "nunits": nunits, **cmeta}
+    return Encoded(name, n, control, data.reshape(-1),
+                   control_bits=cbits, data_bits=int(bw.sum()) * 4,
+                   header_bits=32, meta=meta)
+
+
+# --------------------------------------------------------------------------- #
+# numpy oracle decode
+# --------------------------------------------------------------------------- #
+
+
+def _decode_control_np(enc: Encoded) -> np.ndarray:
+    cg, ld = _split(enc.meta["variant"])
+    q = enc.meta["Q"]
+    control = enc.control
+    if ld == "B":
+        gsz, fb, gb = B_LAYOUT[cg]
+        idx = np.arange(q)
+        offs = (idx // gsz) * gb + (idx % gsz) * fb
+        from .bits import gather_bits_np
+        return gather_bits_np(control, offs, np.full(q, fb)) + 1
+    if ld == "CU":
+        bits = words_to_bits_np(control, enc.control_bits)
+        zpos = np.flatnonzero(bits == 0)[:q]
+        prev = np.concatenate([[-1], zpos[:-1]])
+        return (zpos - prev).astype(np.int64)
+    by = control.view(np.uint8)[: enc.meta["n_control_bytes"]]
+    counts = IU_COUNT_NP[by]
+    lds = IU_LDS_NP[by]
+    out = np.zeros(q, np.int64)
+    base = np.cumsum(counts) - counts
+    for s in range(8):
+        sel = s < counts
+        tgt = base[sel] + s
+        keep = tgt < q
+        out[tgt[keep]] = lds[sel, s][keep]
+    return out
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    cg, _ = _split(enc.meta["variant"])
+    q = enc.meta["Q"]
+    if q == 0:
+        return np.zeros(0, np.uint32)
+    nunits = _decode_control_np(enc)
+    bw = nunits * cg
+    ends = np.cumsum(bw)
+    offs = ends - bw
+    data = enc.data.reshape(-1, 4)
+    from .bits import gather_bits_np
+    out = np.stack([gather_bits_np(data[:, c], offs, bw) for c in range(4)], axis=1)
+    return out.reshape(-1)[: enc.n]
+
+
+# --------------------------------------------------------------------------- #
+# JAX decoders
+# --------------------------------------------------------------------------- #
+
+
+def jax_args(enc: Encoded) -> dict:
+    data = enc.data.reshape(-1, 4)
+    data = np.concatenate([data, np.zeros((1, 4), np.uint32)])   # slack row for hi gather
+    control = np.concatenate([enc.control, np.zeros(2, np.uint32)])
+    return {
+        "control": jnp.asarray(control),
+        "data": jnp.asarray(data),
+        "n": enc.n,
+        "q": enc.meta["Q"],
+        "variant": enc.meta["variant"],
+        "n_control_bytes": enc.meta.get("n_control_bytes", 0),
+    }
+
+
+def _control_bits_jnp(control: jnp.ndarray) -> jnp.ndarray:
+    """uint32 words -> flat bit array (LSB-first)."""
+    sh = jnp.arange(32, dtype=jnp.uint32)
+    return ((control[:, None] >> sh[None, :]) & jnp.uint32(1)).reshape(-1)
+
+
+def _decode_nunits_vec(control: jnp.ndarray, q: int, variant: str, n_control_bytes: int) -> jnp.ndarray:
+    cg, ld = _split(variant)
+    if ld == "B":
+        gsz, fb, gb = B_LAYOUT[cg]
+        idx = jnp.arange(q, dtype=jnp.int32)
+        offs = (idx // gsz) * gb + (idx % gsz) * fb
+        return gather_bits_jnp(control, offs, jnp.full(q, fb, jnp.int32)).astype(jnp.int32) + 1
+    if ld == "CU":
+        bits = _control_bits_jnp(control)
+        zcum = jnp.cumsum(jnp.uint32(1) - bits)                 # rank of zeros
+        # position of the q-th zero via scatter (searchsorted is ~4x slower
+        # on CPU and scatter is equally lane-parallel on TPU — §Perf)
+        j = jnp.arange(bits.shape[0], dtype=jnp.int32)
+        idx = jnp.where(bits == 0, (zcum - 1).astype(jnp.int32), q)
+        zpos = jnp.zeros(q, jnp.int32).at[idx].set(j, mode="drop", unique_indices=True)
+        prev = jnp.concatenate([jnp.full(1, -1, jnp.int32), zpos[:-1]])
+        return zpos - prev
+    # IU: packed decode via the 256-entry LUT (paper §5.3.1)
+    by = (control.view(jnp.uint8) if control.dtype == jnp.uint32 else control)
+    by = by[:n_control_bytes].astype(jnp.int32)
+    counts = IU_COUNT_J[by]                                     # (B,)
+    lds = IU_LDS_J[by]                                          # (B, 8)
+    base = jnp.cumsum(counts) - counts
+    idx = base[:, None] + jnp.arange(8, dtype=jnp.int32)[None, :]
+    slot_ok = jnp.arange(8, dtype=jnp.int32)[None, :] < counts[:, None]
+    idx = jnp.where(slot_ok, idx, q)
+    return jnp.zeros(q, jnp.int32).at[idx.reshape(-1)].set(lds.reshape(-1), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q", "variant", "n_control_bytes"))
+def decode_jax_vec(control, data, n: int, q: int, variant: str, n_control_bytes: int = 0):
+    """SIMD-Group-Scheme decode: packed LD decode + one vectorized unpack."""
+    cg, _ = _split(variant)
+    nunits = _decode_nunits_vec(control, q, variant, n_control_bytes)
+    bw = (nunits * cg).astype(jnp.uint32)
+    ends = jnp.cumsum(bw)
+    offs = (ends - bw).astype(jnp.int32)
+    word = (offs >> 5)
+    bit = (offs & 31).astype(jnp.uint32)[:, None]
+    lo = data[word]                                             # (Q, 4)
+    hi = data[word + 1]
+    val = jnp.right_shift(lo, bit) | jnp.where(
+        bit == 0, jnp.uint32(0), jnp.left_shift(hi, jnp.uint32(32) - bit))
+    val = val & mask_jnp(bw)[:, None]
+    return val.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "q", "variant", "n_control_bytes"))
+def decode_jax_scalar(control, data, n: int, q: int, variant: str, n_control_bytes: int = 0):
+    """Paper-faithful scalar decode: one quadruple per scan step.
+
+    Unary LDs are read with the TZCNT-style bit trick (paper §5.4): the number
+    of units is 1 + the index of the lowest zero bit of a 32-bit window.
+    """
+    cg, ld = _split(variant)
+
+    def read_window(pos):
+        w = pos >> 5
+        b = (pos & 31).astype(jnp.uint32)
+        lo = jnp.right_shift(control[w], b)
+        hi = jnp.where(b == 0, jnp.uint32(0), jnp.left_shift(control[w + 1], jnp.uint32(32) - b))
+        return lo | hi
+
+    def lowest_zero(x):  # index of lowest 0-bit of x (must exist)
+        y = ~x
+        return (jnp.uint32(31) - jax.lax.clz(y & (~y + jnp.uint32(1)))).astype(jnp.int32)
+
+    if ld == "B":
+        gsz, fb, gb = B_LAYOUT[cg]
+
+        def read_ld(qidx, ldpos):
+            off = (qidx // gsz) * gb + (qidx % gsz) * fb
+            f = read_window(off) & mask_jnp(jnp.uint32(fb))
+            return f.astype(jnp.int32) + 1, ldpos
+    elif ld == "CU":
+
+        def read_ld(qidx, ldpos):
+            u = lowest_zero(read_window(ldpos)) + 1
+            return u, ldpos + u
+    else:  # IU
+
+        def read_ld(qidx, ldpos):
+            rem = (jnp.int32(8) - (ldpos & 7)).astype(jnp.uint32)
+            win = read_window(ldpos) & mask_jnp(rem)
+            is_pad = win == mask_jnp(rem)                        # all ones -> padding
+            ldpos = jnp.where(is_pad, (ldpos >> 3) * 8 + 8, ldpos)
+            u = lowest_zero(read_window(ldpos)) + 1
+            return u, ldpos + u
+
+    def step(carry, qidx):
+        datapos, ldpos = carry
+        u, ldpos = read_ld(qidx, ldpos)
+        bw = (u * cg).astype(jnp.uint32)
+        w = datapos >> 5
+        b = (datapos & 31).astype(jnp.uint32)
+        lo = data[w]
+        hi = jnp.where(b == 0, jnp.zeros(4, jnp.uint32), jnp.left_shift(data[w + 1], jnp.uint32(32) - b))
+        vals = (jnp.right_shift(lo, b) | hi) & mask_jnp(bw)
+        return (datapos + bw.astype(jnp.int32), ldpos), vals
+
+    (_, _), vals = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), jnp.arange(q, dtype=jnp.int32))
+    return vals.reshape(-1)[:n]

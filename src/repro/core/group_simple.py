@@ -1,0 +1,233 @@
+"""Group-Simple (paper §4): word-aligned codec with separated control/data areas.
+
+Encoding format (Fig. 2):
+  * control area — one 4-bit selector per 128-bit data vector, two per byte.
+  * data area    — 128-bit vectors = 4 x uint32 components, 4-way vertical
+    layout: quadruple k of a vector puts its 4 integers at bit offset k*BW of
+    components 0..3.
+
+Ten patterns (Table III): (NUM, BW) with NUM integers per component, BW bits
+each, BW up to 32 (vs 28 for Simple-9/16).
+
+Pattern selection (Algorithm 1) runs on the *quad max array* — the OR-reduced
+pseudo-max (§4.4) — so it touches a quarter of the input.
+
+Decoders:
+  * ``decode_np``          — numpy oracle.
+  * ``decode_jax_scalar``  — paper's scalar routine: sequential scan over
+    selectors, one 128-bit vector per step (the "Group-Simple" rows of
+    Table VII).
+  * ``decode_jax_vec``     — the vectorized version (SIMD-Group-Simple): all
+    vectors decoded lane-parallel; on TPU every (pattern, slot, component)
+    shift+mask runs on the VPU and the scatter is a single gather-free store.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bits import ebw_np, mask_np, pack_bits_np
+from .encoded import Encoded
+from .layout import quadmax_np, to_vertical_np
+
+NUM = np.array([32, 16, 10, 8, 6, 5, 4, 3, 2, 1], dtype=np.int32)
+BW = np.array([1, 2, 3, 4, 5, 6, 8, 10, 16, 32], dtype=np.int32)
+
+NUM_J = jnp.asarray(NUM)
+BW_J = jnp.asarray(BW)
+# shift of slot k under selector s, clipped to a legal shift amount; slots
+# k >= NUM[s] are masked out by VALID.
+_SHIFTS = np.minimum(np.arange(32)[None, :] * BW[:, None], 31).astype(np.uint32)
+SHIFTS_J = jnp.asarray(_SHIFTS)
+VALID = np.arange(32)[None, :] < NUM[:, None]
+VALID_J = jnp.asarray(VALID)
+MASKS_J = jnp.asarray(mask_np(BW))
+
+
+# --------------------------------------------------------------------------- #
+# encoding (host / numpy)
+# --------------------------------------------------------------------------- #
+
+
+def _run_lengths(fits: np.ndarray) -> np.ndarray:
+    """runlen[j] = number of consecutive True starting at j."""
+    q = len(fits)
+    false_pos = np.flatnonzero(~fits)
+    if len(false_pos) == 0:
+        return q - np.arange(q)
+    nxt = np.searchsorted(false_pos, np.arange(q), side="left")
+    nxt_false = np.where(nxt < len(false_pos), false_pos[np.minimum(nxt, len(false_pos) - 1)], q)
+    return nxt_false - np.arange(q)
+
+
+def select_patterns(quadmax: np.ndarray) -> np.ndarray:
+    """Algorithm 1 on the quad max array -> array of selectors."""
+    e = ebw_np(quadmax)
+    q = len(e)
+    runlen = np.stack([_run_lengths(e <= BW[s]) for s in range(10)])
+    sels = []
+    j = 0
+    while j < q:
+        rem = q - j
+        for s in range(10):
+            need = min(int(NUM[s]), rem)
+            if runlen[s, j] >= need:
+                sels.append(s)
+                j += need
+                break
+        else:  # pragma: no cover - sel 9 (BW=32) always fits
+            raise AssertionError("no pattern fits")
+    return np.asarray(sels, dtype=np.uint8)
+
+
+def encode(x: np.ndarray) -> Encoded:
+    x = np.asarray(x, dtype=np.uint32)
+    n = len(x)
+    if n == 0:
+        return Encoded("group_simple", 0, np.zeros(0, np.uint32), np.zeros(0, np.uint32), header_bits=32)
+    v = to_vertical_np(x, 4)                      # (Q, 4)
+    qm = quadmax_np(x, 4, pseudo=True)
+    sels = select_patterns(qm)
+    p = len(sels)
+    starts = np.concatenate([[0], np.cumsum(NUM[sels])[:-1]])  # quad offset per vector
+    data = np.zeros((p, 4), dtype=np.uint32)
+    qlen = len(qm)
+    for s in range(10):
+        rows = np.flatnonzero(sels == s)
+        if len(rows) == 0:
+            continue
+        num, bw = int(NUM[s]), int(BW[s])
+        idx = starts[rows][:, None] + np.arange(num)[None, :]          # (R, num)
+        valid = idx < qlen
+        idx = np.minimum(idx, qlen - 1)
+        vals = v[idx].astype(np.uint64) & np.uint64(mask_np(bw))       # (R, num, 4)
+        vals = np.where(valid[:, :, None], vals, 0)
+        shifts = (np.arange(num) * bw).astype(np.uint64)
+        packed = np.zeros((len(rows), 4), dtype=np.uint64)
+        for k in range(num):
+            packed |= vals[:, k, :] << shifts[k]
+        data[rows] = packed.astype(np.uint32)
+    control, cbits = pack_bits_np(sels.astype(np.uint64), np.full(p, 4, np.int64))
+    return Encoded(
+        "group_simple", n, control, data.reshape(-1),
+        control_bits=cbits, data_bits=int(data.size) * 32, header_bits=32,
+        meta={"sels": sels, "n_vectors": p},
+    )
+
+
+# --------------------------------------------------------------------------- #
+# numpy oracle decode
+# --------------------------------------------------------------------------- #
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    if enc.n == 0:
+        return np.zeros(0, np.uint32)
+    sels = enc.meta["sels"]
+    p = len(sels)
+    data = enc.data.reshape(p, 4)
+    starts = np.concatenate([[0], np.cumsum(NUM[sels])[:-1]])
+    total_q = int(starts[-1] + NUM[sels[-1]]) if p else 0
+    out = np.zeros((total_q, 4), dtype=np.uint32)
+    for s in range(10):
+        rows = np.flatnonzero(sels == s)
+        if len(rows) == 0:
+            continue
+        num, bw = int(NUM[s]), int(BW[s])
+        shifts = (np.arange(num) * bw).astype(np.uint64)
+        vals = (data[rows].astype(np.uint64)[:, None, :] >> shifts[None, :, None]) & np.uint64(mask_np(bw))
+        idx = starts[rows][:, None] + np.arange(num)[None, :]
+        keep = idx < total_q
+        out[np.minimum(idx, total_q - 1)[keep]] = vals.astype(np.uint32)[keep]
+    return out.reshape(-1)[: enc.n]
+
+
+# --------------------------------------------------------------------------- #
+# JAX decoders
+# --------------------------------------------------------------------------- #
+
+
+def jax_args(enc: Encoded) -> dict:
+    sels = jnp.asarray(enc.meta["sels"].astype(np.int32))
+    data = jnp.asarray(enc.data.reshape(-1, 4))
+    return {"sels": sels, "data": data, "n": enc.n}
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def decode_jax_vec(sels: jnp.ndarray, data: jnp.ndarray, n: int) -> jnp.ndarray:
+    """SIMD-Group-Simple decode, gather formulation: every output integer
+    locates its (vector, slot, component) and extracts with one shift+mask.
+
+    Replaces the original scatter formulation (kept below as
+    ``decode_jax_vec_scatter``): that one materialized all 32 slots per
+    pattern (~4x wasted lanes at NUM~8) and paid a scatter; this one is
+    O(n) gathers with zero waste — 6.5x faster on CPU, and on TPU it is the
+    lane-parallel shape the VPU wants (EXPERIMENTS.md §Perf, iteration 1).
+    """
+    num = NUM_J[sels]                                            # (P,)
+    ends = jnp.cumsum(4 * num)                                   # (P,)
+    starts = ends - 4 * num
+    i = jnp.arange(n, dtype=jnp.int32)
+    # segment id via boundary marks + cumsum (searchsorted measured 1.5x
+    # slower here — §Perf iteration 2)
+    marks = jnp.zeros(n, jnp.int32).at[starts].add(1, mode="drop")
+    p = jnp.cumsum(marks) - 1
+    sel = sels[p]
+    local = i - starts[p]
+    k = (local >> 2).astype(jnp.uint32)
+    c = local & 3
+    bw = BW_J[sel].astype(jnp.uint32)
+    word = data.reshape(-1)[p * 4 + c]
+    return jnp.right_shift(word, k * bw) & MASKS_J[sel]
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def decode_jax_vec_scatter(sels: jnp.ndarray, data: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Original scatter formulation (first §Perf iteration baseline)."""
+    p = sels.shape[0]
+    num = NUM_J[sels]                                            # (P,)
+    offs = 4 * (jnp.cumsum(num) - num)                           # (P,) int offsets
+    shifts = SHIFTS_J[sels]                                      # (P, 32)
+    masks = MASKS_J[sels]                                        # (P,)
+    vals = jnp.right_shift(data[:, None, :], shifts[:, :, None].astype(jnp.uint32))
+    vals = vals & masks[:, None, None]                           # (P, 32, 4)
+    slot = jnp.arange(32, dtype=jnp.int32)
+    idx = offs[:, None, None] + 4 * slot[None, :, None] + jnp.arange(4, dtype=jnp.int32)[None, None, :]
+    valid = VALID_J[sels][:, :, None] & jnp.ones((p, 32, 4), bool)
+    idx = jnp.where(valid, idx, n)                               # out-of-range -> dropped
+    out = jnp.zeros(n, dtype=jnp.uint32).at[idx.reshape(-1)].set(
+        vals.reshape(-1), mode="drop", unique_indices=True)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def decode_jax_scalar(sels: jnp.ndarray, data: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Paper-faithful scalar decode: one vector per scan step, switch on SEL."""
+
+    def branch(s):
+        num, bw = int(NUM[s]), int(BW[s])
+
+        def body(vec):
+            shifts = (jnp.arange(num, dtype=jnp.uint32) * np.uint32(bw))
+            vals = jnp.right_shift(vec[None, :], shifts[:, None]) & jnp.uint32(int(mask_np(bw)))
+            buf = jnp.zeros((32, 4), jnp.uint32).at[:num].set(vals)
+            return buf.reshape(-1), jnp.int32(4 * num)
+
+        return body
+
+    branches = [branch(s) for s in range(10)]
+
+    def step(carry, inp):
+        out, off = carry
+        sel, vec = inp
+        buf, adv = jax.lax.switch(sel, branches, vec)
+        out = jax.lax.dynamic_update_slice(out, buf, (off,))
+        return (out, off + adv), None
+
+    out0 = jnp.zeros(n + 128, dtype=jnp.uint32)
+    (out, _), _ = jax.lax.scan(step, (out0, jnp.int32(0)), (sels, data))
+    return out[:n]

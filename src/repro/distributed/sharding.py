@@ -1,0 +1,209 @@
+"""Logical-axis sharding: one model code path, many parallelism plans.
+
+A *plan* maps logical axis names (both weight axes like "embed"/"heads"/
+"expert" and activation axes like "act_seq") to mesh axis tuples.  Models
+declare logical axes only; `shard(x, axes...)` applies
+``with_sharding_constraint`` when a (mesh, plan) context is active and is a
+no-op otherwise (CPU smoke tests).  Divisibility guard: any mesh axis that
+does not evenly divide the dimension is dropped from the spec (recorded), so
+every (arch x shape x mesh) cell lowers.
+
+Parallelism vocabulary (DESIGN.md §8): DP/FSDP = ("pod","data") on batch and
+weight fan-in dims; TP = "model" on heads/ffn; EP = "model" on expert dims;
+SP = "model" on the residual sequence dim (Megatron-SP style: layer internals
+re-shard via inserted all-gather / reduce-scatter).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass
+class Plan:
+    name: str
+    rules: dict                     # logical axis -> tuple of mesh axes | None
+
+    def axes_of(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        got = self.rules.get(logical, None)
+        if got is None:
+            return None
+        if isinstance(got, str):
+            return (got,)
+        return tuple(got)
+
+
+_STATE = threading.local()
+
+
+def _active():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, plan: Plan):
+    prev = _active()
+    _STATE.ctx = (mesh, plan)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _mesh_size(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(logical_axes, dims=None) -> PartitionSpec:
+    """Logical axes tuple -> PartitionSpec under the active plan.
+
+    dims (optional): concrete dim sizes for the divisibility guard.
+    """
+    ctx = _active()
+    if ctx is None:
+        return PartitionSpec()
+    mesh, plan = ctx
+    parts = []
+    for i, lax_ in enumerate(logical_axes):
+        axes = plan.axes_of(lax_)
+        if axes is None:
+            parts.append(None)
+            continue
+        # ignore mesh axes absent from the active mesh (e.g. "pod" single-pod)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if dims is not None:
+            # drop trailing mesh axes until the dim divides evenly
+            while axes and dims[i] % _mesh_size(mesh, axes) != 0:
+                axes = axes[:-1]
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    return PartitionSpec(*parts)
+
+
+def shard(x, *logical_axes):
+    """Apply a sharding constraint to an activation (no-op without a context)."""
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = spec_for(logical_axes, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for_axes_tree(axes_tree, shape_tree):
+    """Map a tree of logical-axes tuples (+ shapes) to NamedShardings."""
+    ctx = _active()
+    assert ctx is not None, "sharding_for_axes_tree requires an active plan"
+    mesh, _ = ctx
+
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, dims=arr.shape))
+
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in t))
+
+
+# --------------------------------------------------------------------------- #
+# plans
+# --------------------------------------------------------------------------- #
+
+DP = ("pod", "data")                # data-parallel axes (pod collapses single-pod)
+
+
+def lm_dense_plan() -> Plan:
+    """Dense LMs (starcoder2, smollm): FSDP + sequence parallelism.
+
+    Head counts (24/36/9) don't divide the 16-way model axis, so attention
+    keeps heads local and shards the *sequence* over "model" (KV all-gathered
+    — cheap under GQA with 2-4 KV heads).  Weights ZeRO-3-sharded over
+    (DP x model), all-gathered per layer by SPMD.
+    """
+    return Plan("lm_dense_sp", {
+        "batch": DP,
+        "act_seq": ("model",), "act_seq_attn": ("model",),
+        "act_seq_ffn": ("model",),
+        "act_heads": None, "act_ffn": None, "act_embed": None,
+        "act_expert": None, "act_ffn_expert": None,
+        "embed": DP, "ffn": ("model",), "vocab": ("model",),
+        "heads": None, "kv_heads": None,
+    })
+
+
+def lm_moe_plan(expert_parallel: bool, capacity_parallel: bool = False) -> Plan:
+    """MoE LMs: Megatron-SP residual (seq over "model") + TP over heads/ffn
+    inside the blocks + FSDP over DP.
+
+    Expert compute, one of three modes:
+      * EP (expert_parallel, E >= axis): experts over "model" (deepseek 64e)
+      * TP (default): expert hidden dim over "model" — replicates the
+        gathered token tensor across the axis (cotangent all-reduces)
+      * CP (capacity_parallel): the capacity dim over "model" — tokens stay
+        sharded through the expert matmuls; weights all-gathered bf16.
+    """
+    mode = "_ep" if expert_parallel else ("_cp" if capacity_parallel else "_tp")
+    return Plan("lm_moe" + mode, {
+        "batch": DP,
+        "act_seq": ("model",),            # residual stream: sequence-sharded
+        "act_seq_attn": None, "act_seq_ffn": None,
+        "act_heads": ("model",), "act_ffn": ("model",), "act_embed": None,
+        "act_expert": ("model",) if expert_parallel else None,
+        "act_capacity": ("model",) if capacity_parallel else None,
+        "act_ffn_expert": None if (expert_parallel or capacity_parallel) else ("model",),
+        "embed": DP, "ffn": ("model",), "vocab": ("model",),
+        "heads": ("model",), "kv_heads": ("model",),
+        "expert": ("model",) if expert_parallel else None,
+        "ffn_expert": None if (expert_parallel or capacity_parallel) else ("model",),
+    })
+
+
+def lm_serve_plan(dense: bool) -> Plan:
+    """Serving: batch over DP, KV-cache sequence over "model" (split-K /
+    flash-decoding style partial-softmax reductions inserted by SPMD)."""
+    rules = {
+        "batch": DP, "act_seq": None, "act_seq_attn": None,
+        "act_seq_ffn": None, "act_cache": ("model",),
+        "embed": DP, "ffn": ("model",), "vocab": ("model",),
+        "heads": None if dense else ("model",),
+        "kv_heads": None, "act_heads": None if dense else ("model",),
+        "act_ffn": None if dense else ("model",),
+        "expert": None if dense else ("model",),
+        "ffn_expert": None,
+        "act_expert": None, "act_ffn_expert": None,
+        "act_embed": None,
+    }
+    return Plan("lm_serve", rules)
+
+
+def gnn_plan() -> Plan:
+    """GNN: edges sharded over all axes (segment-sum + psum), nodes replicated
+    or row-sharded where divisible."""
+    return Plan("gnn_edge_dp", {
+        "batch": DP, "edges": ("pod", "data", "model"), "nodes": None,
+        "feat": None, "act_embed": None, "embed": DP, "ffn": ("model",),
+    })
+
+
+def recsys_plan() -> Plan:
+    """RecSys: embedding-table rows over "model" (EP), batch over DP axes,
+    candidate corpus over "model" for retrieval scoring."""
+    return Plan("recsys_ep", {
+        "batch": DP, "table_rows": ("model",), "embed_dim": None,
+        "act_embed": None, "embed": DP, "ffn": None, "mlp": ("model",),
+        "candidates": ("model",),
+    })

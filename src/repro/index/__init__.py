@@ -1,0 +1,1 @@
+from . import invindex, query  # noqa: F401

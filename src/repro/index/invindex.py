@@ -1,0 +1,72 @@
+"""Compressed inverted index (paper §7.4/§7.5).
+
+Per term: d-gapped docids + TFs compressed with a selected codec; posting
+lists shorter than 64 fall back to Variable Byte (paper §7.5).  Block-level
+skip pointers every 512 postings (first docid + compressed offsets per block)
+support AND-query skipping without decoding whole lists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import codec as codec_lib
+from repro.core.dgap import dgap_decode_np, dgap_encode_np
+
+SKIP = 512
+SHORT = 64
+
+
+@dataclasses.dataclass
+class TermPostings:
+    df: int
+    blocks: list                   # list of (first_docid, enc_gaps, enc_tfs)
+
+    def nbytes(self) -> int:
+        return sum(g.nbytes() + t.nbytes() for _, g, t in self.blocks) + 8 * len(self.blocks)
+
+
+@dataclasses.dataclass
+class InvertedIndex:
+    codec: str
+    terms: dict
+    n_docs: int
+    doclen: np.ndarray
+
+    @staticmethod
+    def build(doclen: np.ndarray, postings: dict, codec: str = "group_simple") -> "InvertedIndex":
+        spec = codec_lib.get(codec)
+        vb = codec_lib.get("varbyte")
+        terms = {}
+        for t, (docids, tfs) in postings.items():
+            use = spec if len(docids) >= SHORT else vb
+            blocks = []
+            for i in range(0, len(docids), SKIP):
+                ids = docids[i:i + SKIP]
+                gaps = dgap_encode_np(ids)
+                gaps = gaps.copy()
+                gaps[0] = 0                      # first docid kept in the skip entry
+                blocks.append((int(ids[0]), use.encode(gaps), use.encode(tfs[i:i + SKIP])))
+            terms[t] = TermPostings(len(docids), blocks)
+        return InvertedIndex(codec, terms, len(doclen), np.asarray(doclen))
+
+    def decode_term(self, t: int, min_docid: int = 0):
+        """Decode postings, skipping blocks entirely below min_docid."""
+        tp = self.terms[t]
+        ids_out, tf_out = [], []
+        for bi, (first, encg, enct) in enumerate(tp.blocks):
+            nxt = tp.blocks[bi + 1][0] if bi + 1 < len(tp.blocks) else None
+            if nxt is not None and nxt <= min_docid:
+                continue                         # skip pointer: whole block below
+            gaps = codec_lib.get(encg.codec).decode(encg)
+            ids = dgap_decode_np(gaps) + np.uint32(first)
+            ids_out.append(ids)
+            tf_out.append(codec_lib.get(enct.codec).decode(enct))
+        if not ids_out:
+            return np.zeros(0, np.uint32), np.zeros(0, np.uint32)
+        return np.concatenate(ids_out), np.concatenate(tf_out)
+
+    def size_bytes(self) -> int:
+        return sum(tp.nbytes() for tp in self.terms.values())

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+kernels: bitpack/bitunpack (fixed-bw shift+mask, the §3.2 inner loop),
+quadmax (OR pseudo-max, §4.4), scan_add (d-gap decode prefix sum),
+unpack_delta (beyond-paper fused unpack+scan).  ops.py holds jit wrappers;
+ref.py the pure-jnp oracles.
+"""
+
+from . import bitpack, ops, quadmax, ref, scan_add, unpack_delta
+
+__all__ = ["bitpack", "ops", "quadmax", "ref", "scan_add", "unpack_delta"]

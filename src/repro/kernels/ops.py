@@ -1,0 +1,72 @@
+"""jit'd stream-level wrappers around the Pallas kernels.
+
+`interpret` defaults to auto: Pallas interpret mode on CPU (this container),
+compiled Mosaic on TPU.  Streams are flat uint32 arrays; wrappers handle the
+pad-to-frame plumbing and expose the encoder/decoder entry points used by the
+compressed data pipeline and the gradient compressor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitpack, quadmax, scan_add, unpack_delta
+from .bitpack import FRAME_INTS, FRAME_ROWS, LANES
+
+
+def _auto_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def pad_to_frames(x: jnp.ndarray) -> jnp.ndarray:
+    """Flat (n,) -> (F*32, 128) row-major tiles (linear order preserved)."""
+    n = x.shape[0]
+    f = max(1, -(-n // FRAME_INTS))
+    pad = f * FRAME_INTS - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros(pad, x.dtype)])
+    return x.reshape(f * FRAME_ROWS, LANES)
+
+
+def pack_stream(x: jnp.ndarray, bw: int, interpret=None) -> jnp.ndarray:
+    """Pack a flat uint32 stream at fixed bit width bw -> (F*bw, 128) words."""
+    return bitpack.pack_frames(pad_to_frames(x.astype(jnp.uint32)), bw,
+                               interpret=_auto_interpret(interpret))
+
+
+def unpack_stream(packed: jnp.ndarray, bw: int, n: int, interpret=None) -> jnp.ndarray:
+    out = bitpack.unpack_frames(packed, bw, interpret=_auto_interpret(interpret))
+    return out.reshape(-1)[:n]
+
+
+def select_bw(x: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    """Per-frame bit width from the OR pseudo-max (paper §4.4 on TPU tiles)."""
+    t = quadmax.frame_or(pad_to_frames(x.astype(jnp.uint32)),
+                         interpret=_auto_interpret(interpret))   # (F, 128)
+    # cross-lane OR epilogue (cheap: F x 128) via log-step folding
+    w = LANES
+    while w > 1:
+        t = t[:, : w // 2] | t[:, w // 2: w]
+        w //= 2
+    acc = t[:, 0]
+    return jnp.maximum(32 - jax.lax.clz(acc), 1).astype(jnp.int32)
+
+
+def prefix_sum(x: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    """Inclusive prefix sum of a flat uint32 stream (d-gap decode)."""
+    n = x.shape[0]
+    tiles = pad_to_frames(x.astype(jnp.uint32))
+    out = scan_add.prefix_sum_blocks(tiles, interpret=_auto_interpret(interpret))
+    return out.reshape(-1)[:n]
+
+
+def unpack_delta_stream(packed: jnp.ndarray, bw: int, n: int, interpret=None) -> jnp.ndarray:
+    """Fused unpack + prefix sum: packed gaps -> docids."""
+    out = unpack_delta.unpack_delta_frames(packed, bw, interpret=_auto_interpret(interpret))
+    return out.reshape(-1)[:n]

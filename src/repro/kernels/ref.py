@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Layout (TPU-wide generalization of the paper's 4-way vertical layout,
+DESIGN.md §2): a *frame* is 4096 integers arranged as a (32, 128) tile — 128
+lanes, 32 slots per lane, linear stream order i = 32*128*f + 128*r + l.  A
+frame packed at bit width bw occupies exactly (bw, 128) uint32 words: lane l
+packs its 32 values LSB-first into bw words (32*bw bits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FRAME_ROWS = 32
+LANES = 128
+FRAME_INTS = FRAME_ROWS * LANES
+
+
+def _mask(bw: int) -> jnp.ndarray:
+    return jnp.uint32(0xFFFFFFFF if bw >= 32 else (1 << bw) - 1)
+
+
+def pack_frames_ref(x: jnp.ndarray, bw: int) -> jnp.ndarray:
+    """(F*32, 128) uint32 -> (F*bw, 128) packed at bw bits/value."""
+    f = x.shape[0] // FRAME_ROWS
+    x = x.reshape(f, FRAME_ROWS, LANES)
+    out = jnp.zeros((f, bw, LANES), jnp.uint32)
+    m = _mask(bw)
+    for r in range(FRAME_ROWS):
+        v = x[:, r, :] & m
+        start = r * bw
+        w, off = start // 32, start % 32
+        out = out.at[:, w, :].set(out[:, w, :] | (v << jnp.uint32(off)))
+        if off + bw > 32:
+            out = out.at[:, w + 1, :].set(out[:, w + 1, :] | (v >> jnp.uint32(32 - off)))
+    return out.reshape(f * bw, LANES)
+
+
+def unpack_frames_ref(packed: jnp.ndarray, bw: int) -> jnp.ndarray:
+    """(F*bw, 128) -> (F*32, 128)."""
+    f = packed.shape[0] // bw
+    p = packed.reshape(f, bw, LANES)
+    out = jnp.zeros((f, FRAME_ROWS, LANES), jnp.uint32)
+    m = _mask(bw)
+    for r in range(FRAME_ROWS):
+        start = r * bw
+        w, off = start // 32, start % 32
+        v = p[:, w, :] >> jnp.uint32(off)
+        if off + bw > 32:
+            v = v | (p[:, w + 1, :] << jnp.uint32(32 - off))
+        out = out.at[:, r, :].set(v & m)
+    return out.reshape(f * FRAME_ROWS, LANES)
+
+
+def frame_or_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(F*32, 128) -> (F, 128) per-frame per-lane OR (pseudo-max, paper §4.4)."""
+    f = x.shape[0] // FRAME_ROWS
+    x = x.reshape(f, FRAME_ROWS, LANES)
+    out = x[:, 0, :]
+    for r in range(1, FRAME_ROWS):
+        out = out | x[:, r, :]
+    return out
+
+
+def prefix_sum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum over the linear stream order of (R, 128) blocks."""
+    shape = x.shape
+    return jnp.cumsum(x.reshape(-1).astype(jnp.uint32), dtype=jnp.uint32).reshape(shape)
+
+
+def unpack_delta_ref(packed: jnp.ndarray, bw: int) -> jnp.ndarray:
+    """Fused bit-unpack + d-gap prefix sum (decode gaps -> docids)."""
+    return prefix_sum_ref(unpack_frames_ref(packed, bw))

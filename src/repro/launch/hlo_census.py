@@ -1,0 +1,264 @@
+"""HLO census: exact roofline accounting from the compiled (post-SPMD,
+post-fusion) HLO module.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scanned-layer models (EXPERIMENTS.md §Roofline documents the 14x undercount we
+measured).  This parser instead:
+
+  * splits the HLO text into computations and builds the call graph
+    (fusion ``calls=``, while ``body=``/``condition=``, call/map/reduce...)
+  * extracts while TRIP COUNTS from the loop-condition constant
+    (lax.scan/fori_loop lower to a counted while),
+  * counts per op: dot FLOPs (2*M*N*K from the result shape x contracting
+    dims), collective wire bytes, and memory traffic (operand+result bytes of
+    top-level ops; fusion-called computations contribute FLOPs only, their
+    bytes are accounted at the fusion call site),
+  * multiplies everything by the product of enclosing trip counts.
+
+Shapes in the partitioned module are per-device, so all outputs are per-chip;
+multiply by chip count for totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)\)(.*)$")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s*->")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_CMP_RE = re.compile(r"compare\(")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dt_dims) -> int:
+    dt, dims = dt_dims
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    kind: str
+    args: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+    def symtab(self) -> dict:
+        return {op.name: op.result_type for op in self.ops}
+
+
+def parse_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        hdr = _COMP_HDR_RE.match(stripped)
+        if hdr and stripped.endswith("{"):
+            cur = Computation(hdr.group(1), [], is_entry=stripped.startswith("ENTRY"))
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4), m.group(5)))
+    return comps
+
+
+def _called(op: Op) -> list:
+    out = []
+    for m in _CALLED_RE.finditer(op.attrs + " " + op.args):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Counted loops compare the induction var against a constant."""
+    consts = {}
+    for op in cond.ops:
+        if op.kind == "constant":
+            mv = re.search(r"constant\((-?\d+)\)", "constant(" + op.args + ")")
+            if mv:
+                consts[op.name] = int(mv.group(1))
+    for op in cond.ops:
+        if op.kind == "compare":
+            for arg in re.findall(r"%([\w.\-]+)", op.args):
+                if arg in consts:
+                    return max(consts[arg], 1)
+            # inline constant operand: s32[] constant(30) inside compare args
+            mv = re.search(r"constant\((-?\d+)\)", op.args)
+            if mv:
+                return max(int(mv.group(1)), 1)
+    return 1
+
+
+def _arg_names(op: Op) -> list:
+    return re.findall(r"%([\w.\-]+)", op.args)
+
+
+def _operand_bytes(op: Op, symtab: dict) -> int:
+    # operand types may be inline or referenced by name
+    total = _shape_bytes(op.args)
+    if total:
+        return total
+    return sum(_shape_bytes(symtab.get(a, "")) for a in _arg_names(op))
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    # result elems x contracting size x 2
+    shapes_res = _SHAPE_RE.findall(op.result_type)
+    if not shapes_res:
+        return 0.0
+    out_elems = _shape_elems(shapes_res[0])
+    arg_shapes = _SHAPE_RE.findall(op.args)
+    if not arg_shapes:
+        names = _arg_names(op)
+        if names:
+            arg_shapes = _SHAPE_RE.findall(symtab.get(names[0], ""))
+    if not arg_shapes:
+        return 0.0
+    lhs = arg_shapes[0]
+    mc = _CONTRACT_RE.search(op.args + " " + op.attrs)
+    k = 1
+    if mc:
+        dims = [int(x) for x in mc.group(1).split(",") if x]
+        lhs_dims = [int(d) for d in lhs[1].split(",") if d]
+        for d in dims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+    return 2.0 * out_elems * k
+
+
+def census(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"error": "no entry computation"}
+
+    # multipliers via DFS from entry
+    mult = {c: 0.0 for c in comps}
+    fusion_called = set()
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for op in comp.ops:
+            called = _called(op)
+            if not called:
+                continue
+            if op.kind == "while":
+                body = cond = None
+                blob = op.attrs + op.args
+                for attr_m in re.finditer(r"(body|condition)=%?([\w.\-]+)", blob):
+                    if attr_m.group(1) == "body":
+                        body = attr_m.group(2)
+                    else:
+                        cond = attr_m.group(2)
+                tc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', blob)
+                if tc:
+                    trips = max(int(tc.group(1)), 1)
+                else:
+                    trips = _while_trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    visit(body, m * trips)
+                if cond:
+                    visit(cond, m * (trips + 1))
+            else:
+                for cal in called:
+                    if op.kind == "fusion":
+                        fusion_called.add(cal)
+                    visit(cal, m)
+
+    visit(entry.name, 1.0)
+
+    flops = 0.0
+    bytes_mem = 0.0
+    coll_bytes = {}
+    coll_count = {}
+    wire = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_called
+        symtab = comp.symtab()
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, symtab)
+            base_kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base_kind in COLLECTIVES:
+                b = _shape_bytes(op.result_type)
+                coll_bytes[base_kind] = coll_bytes.get(base_kind, 0.0) + m * b
+                coll_count[base_kind] = coll_count.get(base_kind, 0) + int(m)
+                wire += m * b * _WIRE_FACTOR[base_kind]
+            if in_fusion or op.kind in ("parameter", "constant", "tuple",
+                                        "get-tuple-element", "bitcast",
+                                        "copy", "copy-start", "copy-done"):
+                continue
+            res_b = _shape_bytes(op.result_type)
+            if op.kind in ("dynamic-slice", "gather", "slice", "while",
+                           "conditional", "broadcast", "iota", "reshape",
+                           "transpose"):
+                # reads only what it produces (loop-invariant operands like the
+                # stacked layer params must not count once per iteration)
+                bytes_mem += m * 2 * res_b
+            elif op.kind in ("dynamic-update-slice", "scatter"):
+                names = _arg_names(op)
+                upd = _shape_bytes(symtab.get(names[1], "")) if len(names) > 1 else res_b
+                bytes_mem += m * 2 * upd
+            else:
+                bytes_mem += m * (res_b + _operand_bytes(op, symtab))
+    return {
+        "flops_per_chip": flops,
+        "mem_bytes_per_chip": bytes_mem,
+        "collective_bytes_per_chip": coll_bytes,
+        "collective_counts_weighted": coll_count,
+        "wire_bytes_per_chip": wire,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips (v5e pod), axes
+("data", "model").  Multi-pod: 2x16x16 = 512 chips, axes ("pod", "data",
+"model") — the "pod" axis carries data parallelism across pods (its
+collectives traverse DCN, which is why gradient compression targets it
+first).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}; have {len(devices)} "
+            "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests / examples)."""
+    import numpy as np
+    ndev = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))

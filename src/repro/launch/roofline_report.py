@@ -1,0 +1,116 @@
+"""Generate the §Roofline markdown table from the dry-run JSONs.
+
+Per (arch x shape x mesh): the three roofline terms (v5e constants), dominant
+bottleneck, MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE for training, 2*N*D
+for serving) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report > experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def _lm_params(cfg):
+    from repro.models import transformer as T
+    from repro.models.specs import count_params
+    specs = T.param_specs(cfg)
+    total = count_params(specs)
+    active = total
+    if cfg.moe:
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        inactive = (cfg.n_experts - cfg.top_k) * per_expert * cfg.n_moe_layers
+        active = total - inactive
+    return total, active
+
+
+def _model_flops(rec) -> float:
+    from repro import configs
+    spec = configs.get(rec["arch"])
+    cell = spec.shapes[rec["shape"]]
+    cfg = spec.config_for_cell(spec.make_config(), cell)
+    kind = rec["kind"]
+    if spec.family == "lm":
+        total, active = _lm_params(cfg)
+        if kind == "train":
+            d = cell.dims["batch"] * cell.dims["seq"]
+            return 6.0 * active * d
+        if kind == "prefill":
+            return 2.0 * active * cell.dims["batch"] * cell.dims["seq"]
+        return 2.0 * active * cell.dims["batch"]          # decode: 1 tok/seq
+    if spec.family == "gnn":
+        dh = cfg.d_hidden
+        e = cell.dims["n_edges"]
+        n = cell.dims["n_nodes"]
+        per_edge = 2 * ((2 * dh + 1) * dh + dh * dh) + 2 * (dh * dh + dh)
+        per_node = 2 * (2 * dh * dh + dh * dh)
+        fwd = cfg.n_layers * (e * per_edge + n * per_node) + 2 * n * cell.dims["d_feat"] * dh
+        return 3.0 * fwd                                   # fwd+bwd
+    # recsys: MLP + interaction flops per sample
+    def mlp_flops(dims, d_in):
+        f, cur = 0, d_in
+        for d in dims:
+            f += 2 * cur * d
+            cur = d
+        return f
+    if cfg.model == "dlrm":
+        per = mlp_flops(cfg.bot_mlp, cfg.n_dense) + mlp_flops(cfg.top_mlp, 415) + 2 * 27 * 27 * 64
+    elif cfg.model == "wide_deep":
+        per = mlp_flops(cfg.top_mlp, cfg.n_sparse * cfg.embed_dim)
+    elif cfg.model == "din":
+        pair = cfg.pair_dim
+        per = cfg.seq_len * mlp_flops(cfg.attn_mlp + (1,), 4 * pair) + mlp_flops(cfg.mlp + (1,), 3 * pair + cfg.n_profile * cfg.embed_dim)
+    else:  # dien
+        per = cfg.seq_len * (2 * 3 * (cfg.pair_dim + cfg.gru_dim) * cfg.gru_dim * 2
+                             + mlp_flops(cfg.attn_mlp + (1,), 2 * cfg.gru_dim))
+    b = cell.dims.get("n_candidates", cell.dims["batch"])
+    mult = 3.0 if kind == "train" else 1.0
+    return mult * per * b
+
+
+def rows(out_dir="experiments/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(path))
+        mesh = "x".join(map(str, rec["mesh"]))
+        chips = int(np.prod(rec["mesh"]))
+        if rec.get("status") == "skipped":
+            out.append((rec["arch"], rec["shape"], mesh, None, rec["skip_reason"]))
+            continue
+        c = rec["census"]
+        tc = c["flops_per_chip"] / PEAK
+        tm = c["mem_bytes_per_chip"] / HBM
+        tl = c["wire_bytes_per_chip"] / ICI
+        dom = max((("compute", tc), ("memory", tm), ("collective", tl)), key=lambda kv: kv[1])[0]
+        mf = _model_flops(rec)
+        hlo_total = c["flops_per_chip"] * chips
+        ratio = mf / hlo_total if hlo_total else float("nan")
+        frac = tc / max(tc, tm, tl)
+        out.append((rec["arch"], rec["shape"], mesh,
+                    (tc, tm, tl, dom, mf, ratio, frac), None))
+    return out
+
+
+def main() -> None:
+    print("| arch | shape | mesh | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant | MODEL_FLOPS | useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, mesh, t, skip in rows():
+        if t is None:
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | SKIPPED | — | — | — |")
+            continue
+        tc, tm, tl, dom, mf, ratio, frac = t
+        print(f"| {arch} | {shape} | {mesh} | {tc*1e3:.2f} | {tm*1e3:.2f} | "
+              f"{tl*1e3:.2f} | {dom} | {mf:.2e} | {ratio:.2f} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

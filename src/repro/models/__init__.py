@@ -1,0 +1,6 @@
+"""Model substrate: transformer LMs (GQA/MLA/MoE/SWA), EGNN, recsys."""
+
+from . import attention, common, egnn, embedding, moe, recsys, sampler, specs, transformer
+
+__all__ = ["attention", "common", "egnn", "embedding", "moe", "recsys",
+           "sampler", "specs", "transformer"]

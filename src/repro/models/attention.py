@@ -1,0 +1,154 @@
+"""Attention variants: GQA (+ sliding window), MLA; chunked online-softmax
+("flash-style") full forward for train/prefill and O(window|cache) decode.
+
+The chunked implementation is pure jnp + lax.scan so it lowers on every
+backend (the dry-run compiles on 512 host devices); on real TPU the same call
+site can swap in a Pallas flash kernel — the math and the sharding contract
+(B->data, H->model, optional S_kv->model for long-context decode) are
+identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+def _chunk_attn(q, k, v, q0: int, causal: bool, window, kv_chunk: int):
+    """Online-softmax attention of q (B,Sq,H,D) over full k/v (B,Skv,KH,D).
+
+    q0 = absolute position of q[0] (queries are at q0..q0+Sq-1, keys at
+    0..Skv-1).  GQA: H % KH == 0, heads grouped.  window: only keys within
+    (pos_q - window, pos_q] attend (SWA).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, g, d)
+    nchunks = -(-skv // kv_chunk)
+    pad = nchunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, kv_chunk, kh, d)
+    vc = v.reshape(b, nchunks, kv_chunk, kh, dv)
+    qpos = q0 + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ci = inp
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qf, kblk.astype(jnp.float32)) * scale
+        # pin the score sharding: without this the partitioner cannot split
+        # the (KH, G) head factorization over the model axis and falls back
+        # to replicating the full score tensor (§Perf HC2: a 2.9e12 B/chip
+        # all-gather on mixtral train)
+        s = shard(s, "batch", "act_seq_attn", "act_heads", None, None)
+        mask = kpos[None, :] <= skv - 1  # drop right-pad
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqkgs,bskd->bqkgd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = shard(jnp.full((b, sq, kh, g), NEG_INF, jnp.float32),
+               "batch", "act_seq_attn", "act_heads", None)
+    l0 = shard(jnp.zeros((b, sq, kh, g), jnp.float32),
+               "batch", "act_seq_attn", "act_heads", None)
+    a0 = shard(jnp.zeros((b, sq, kh, g, dv), jnp.float32),
+               "batch", "act_seq_attn", "act_heads", None, None)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    # nested remat: without it, the scan's backward stacks every chunk's fp32
+    # score tensor in HBM ((nchunks, B, Sq, H, kv_chunk) — the dominant memory
+    # term of every LM train/prefill cell); with it, backward recomputes
+    # scores per chunk from the (m, l, acc) carry.  EXPERIMENTS.md §Perf HC1.
+    step = jax.checkpoint(step, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc_t, vc_t, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool = True, window=None,
+                   q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Train/prefill attention, scanning over q chunks to bound VMEM/HBM."""
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    if sq <= q_chunk:
+        return _chunk_attn(q, k, v, 0, causal, window, min(kv_chunk, k.shape[1]))
+    nq = -(-sq // q_chunk)
+    pad = nq * q_chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qs = jnp.moveaxis(qp.reshape(b, nq, q_chunk, h, d), 1, 0)
+
+    def step(_, inp):
+        qi, ci = inp
+        o = _chunk_attn(qi, k, v, ci * q_chunk, causal, window, kv_chunk)
+        return None, o
+
+    _, outs = jax.lax.scan(step, None, (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, h, dv)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """One-token decode: q (B,1,H,D) over caches (B,S,KH,D); cache_len scalar
+    = number of valid cache entries (the new token's k/v already written)."""
+    b, _, h, d = q.shape
+    skv, kh = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, kh, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(skv)
+    mask = kpos < cache_len                                      # cache_len: scalar
+    if window is not None:
+        mask = mask & (kpos >= cache_len - window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V2): low-rank latent KV cache
+# --------------------------------------------------------------------------- #
+
+
+def mla_decode_attention(q_nope, q_rope, latent_cache, rope_cache, cache_len,
+                         w_uk, w_uv):
+    """Absorbed MLA decode (memory-optimal: cache holds only latents).
+
+    q_nope (B,H,Dn), q_rope (B,H,Dr); latent_cache (B,S,L); rope_cache (B,S,Dr)
+    w_uk (H,L,Dn)  (key up-proj per head), w_uv (H,L,Dv).
+    Returns (B,1,H,Dv).
+    """
+    scale = 1.0 / jnp.sqrt(q_nope.shape[-1] + q_rope.shape[-1]).astype(jnp.float32)
+    qn = q_nope.astype(jnp.float32)
+    qr = q_rope.astype(jnp.float32)
+    lat = latent_cache.astype(jnp.float32)
+    rop = rope_cache.astype(jnp.float32)
+    # absorb key up-projection into the query: q_abs (B,H,L)
+    q_abs = jnp.einsum("bhd,hld->bhl", qn, w_uk.astype(jnp.float32))
+    s = jnp.einsum("bhl,bsl->bhs", q_abs, lat)
+    s = s + jnp.einsum("bhd,bsd->bhs", qr, rop)
+    s = s * scale
+    mask = jnp.arange(lat.shape[1]) < cache_len                  # cache_len: scalar
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", p, lat)                   # attend over latents
+    out = jnp.einsum("bhl,hld->bhd", o_lat, w_uv.astype(jnp.float32))
+    return out[:, None].astype(q_nope.dtype)

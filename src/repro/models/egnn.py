@@ -1,0 +1,137 @@
+"""E(n)-Equivariant GNN (EGNN, Satorras et al. 2021, arXiv:2102.09844).
+
+Message passing via ``jax.ops.segment_sum`` over an edge index — JAX has no
+sparse message-passing primitive, so the scatter/gather IS part of the system
+(kernel_taxonomy §GNN).  Supports the four assigned shapes: full-batch node
+classification (cora / ogb-products), sampled-subgraph training (reddit-like,
+fanout sampler in models/sampler.py), and batched small graphs (molecule,
+graph-level regression via a segment-sum readout).
+
+Layer (eq. 3-6 of the paper):
+  m_ij   = phi_e([h_i, h_j, ||x_i - x_j||^2])
+  x_i'   = x_i + mean_j (x_i - x_j) * phi_x(m_ij)
+  h_i'   = phi_h([h_i, sum_j m_ij])
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .specs import P, abstract_params, axes_tree, init_params, stack_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 16
+    task: str = "node_class"          # node_class | graph_reg
+    coord_dim: int = 3
+    dtype: Any = jnp.float32
+
+
+def _mlp_specs(d_in: int, d_hid: int, d_out: int) -> dict:
+    return {
+        "w0": P((d_in, d_hid), ("embed", "ffn")),
+        "b0": P((d_hid,), (None,), "zeros"),
+        "w1": P((d_hid, d_out), ("ffn", "embed")),
+        "b1": P((d_out,), (None,), "zeros"),
+    }
+
+
+def _mlp(p, x):
+    h = jax.nn.silu(x @ p["w0"].astype(x.dtype) + p["b0"].astype(x.dtype))
+    return h @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype)
+
+
+def param_specs(cfg: EGNNConfig) -> dict:
+    dh = cfg.d_hidden
+    layer = {
+        "phi_e": _mlp_specs(2 * dh + 1, dh, dh),
+        "phi_x": _mlp_specs(dh, dh, 1),
+        "phi_h": _mlp_specs(2 * dh, dh, dh),
+    }
+    return {
+        "embed_in": P((cfg.d_feat, dh), ("embed", "ffn")),
+        "layers": stack_layers(layer, cfg.n_layers),
+        "head": _mlp_specs(dh, dh, cfg.n_classes if cfg.task == "node_class" else 1),
+    }
+
+
+def init(cfg: EGNNConfig, key):
+    return init_params(param_specs(cfg), key)
+
+
+def abstract(cfg: EGNNConfig):
+    return abstract_params(param_specs(cfg))
+
+
+def axes(cfg: EGNNConfig):
+    return axes_tree(param_specs(cfg))
+
+
+def _layer(p, h, x, src, dst, n_nodes: int):
+    """One EGNN layer. src/dst (E,) int32: message j->i along edge (src=j, dst=i)."""
+    hi, hj = h[dst], h[src]
+    xi, xj = x[dst], x[src]
+    diff = xi - xj
+    d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    m = _mlp(p["phi_e"], jnp.concatenate([hi, hj, d2], axis=-1))
+    m = shard(m, "edges", None)
+    wx = _mlp(p["phi_x"], m)                                   # (E, 1)
+    num = jax.ops.segment_sum(diff * wx, dst, num_segments=n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((src.shape[0], 1), x.dtype), dst, num_segments=n_nodes)
+    x = x + num / jnp.maximum(cnt, 1.0)
+    agg = jax.ops.segment_sum(m, dst, num_segments=n_nodes)
+    h = h + _mlp(p["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    return h, x
+
+
+def forward(params, feats, coords, src, dst, cfg: EGNNConfig):
+    """feats (N, d_feat), coords (N, 3), edges (E,). Returns node embeddings."""
+    n = feats.shape[0]
+    h = (feats.astype(cfg.dtype) @ params["embed_in"].astype(cfg.dtype))
+    h = shard(h, "nodes", None)
+    x = coords.astype(cfg.dtype)
+
+    def body(carry, lp):
+        h, x = carry
+        h, x = _layer(lp, h, x, src, dst, n)
+        return (h, x), None
+
+    (h, x), _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), (h, x), params["layers"])
+    return h
+
+
+def node_class_loss(params, batch, cfg: EGNNConfig):
+    """batch: feats, coords, src, dst, labels (N,), label_mask (N,)."""
+    h = forward(params, batch["feats"], batch["coords"], batch["src"], batch["dst"], cfg)
+    logits = _mlp(params["head"], h).astype(jnp.float32)
+    lz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch["label_mask"].astype(jnp.float32)
+    loss = jnp.sum((lz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"ce": loss}
+
+
+def graph_reg_loss(params, batch, cfg: EGNNConfig):
+    """Batched small graphs: graph_id (N,) segments, targets (G,)."""
+    h = forward(params, batch["feats"], batch["coords"], batch["src"], batch["dst"], cfg)
+    g = int(batch["targets"].shape[0])
+    pooled = jax.ops.segment_sum(h, batch["graph_id"], num_segments=g)
+    pred = _mlp(params["head"], pooled)[:, 0].astype(jnp.float32)
+    loss = jnp.mean((pred - batch["targets"].astype(jnp.float32)) ** 2)
+    return loss, {"mse": loss}
+
+
+def loss_fn(params, batch, cfg: EGNNConfig):
+    if cfg.task == "graph_reg":
+        return graph_reg_loss(params, batch, cfg)
+    return node_class_loss(params, batch, cfg)

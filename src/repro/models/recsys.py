@@ -1,0 +1,287 @@
+"""RecSys models: DLRM (RM2), Wide&Deep, DIN, DIEN.
+
+Common substrate: huge sparse embedding tables (row-sharded over "model" via
+models.embedding) -> feature interaction (dot / concat / target-attention /
+AUGRU) -> small MLP.  Four shapes per arch: train_batch (BCE loss),
+serve_p99 / serve_bulk (forward), retrieval_cand (1 query vs 10^6 candidates,
+batched scoring + global top-k — never a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from . import embedding as emb
+from .specs import P, abstract_params, axes_tree, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class RecConfig:
+    name: str
+    model: str                        # dlrm | wide_deep | din | dien
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    table_rows: int = 1 << 20
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+    mlp: tuple = (200, 80)
+    attn_mlp: tuple = (80, 40)
+    seq_len: int = 100
+    gru_dim: int = 108
+    item_vocab: int = 1 << 20
+    cate_vocab: int = 1 << 14
+    n_profile: int = 4
+    profile_vocab: int = 1 << 16
+    dtype: Any = jnp.float32
+
+    @property
+    def pair_dim(self) -> int:        # din/dien: item+cate concat
+        return 2 * self.embed_dim
+
+
+def _mlp_specs(d_in: int, dims: tuple, prefix: str = "") -> dict:
+    out = {}
+    cur = d_in
+    for i, d in enumerate(dims):
+        out[f"w{i}"] = P((cur, d), ("embed", "mlp" if d >= 256 else None))
+        out[f"b{i}"] = P((d,), (None,), "zeros")
+        cur = d
+    return out
+
+
+def _mlp(p, x, n: int, final_act: bool = False):
+    for i in range(n):
+        x = x @ p[f"w{i}"].astype(x.dtype) + p[f"b{i}"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _gru_specs(d_in: int, d_h: int) -> dict:
+    return {
+        "wx": P((d_in, 3 * d_h), ("embed", None)),
+        "wh": P((d_h, 3 * d_h), ("embed", None)),
+        "b": P((3 * d_h,), (None,), "zeros"),
+    }
+
+
+def _gru_cell(p, h, xt, a=None):
+    """GRU step; a (B,1) in [0,1] scales the update gate (AUGRU, DIEN)."""
+    d_h = h.shape[-1]
+    gx = xt @ p["wx"].astype(xt.dtype)
+    gh = h @ p["wh"].astype(h.dtype)
+    zr_x, n_x = gx[..., : 2 * d_h], gx[..., 2 * d_h:]
+    zr_h, n_h = gh[..., : 2 * d_h], gh[..., 2 * d_h:]
+    zr = jax.nn.sigmoid(zr_x + zr_h + p["b"][: 2 * d_h].astype(h.dtype))
+    z, r = zr[..., :d_h], zr[..., d_h:]
+    n = jnp.tanh(n_x + r * n_h + p["b"][2 * d_h:].astype(h.dtype))
+    if a is not None:
+        z = a * z
+    return (1.0 - z) * h + z * n
+
+
+def _gru_scan(p, x, mask, a=None):
+    """x (B, L, D) -> final hidden (B, H) (masked positions keep state)."""
+    b, l, _ = x.shape
+    d_h = p["wh"].shape[0]
+    xs = jnp.moveaxis(x, 1, 0)
+    ms = jnp.moveaxis(mask, 1, 0)
+    as_ = jnp.moveaxis(a, 1, 0) if a is not None else None
+
+    def step(h, inp):
+        if as_ is None:
+            xt, mt = inp
+            hn = _gru_cell(p, h, xt)
+        else:
+            xt, mt, at = inp
+            hn = _gru_cell(p, h, xt, at[:, None])
+        h = jnp.where(mt[:, None], hn, h)
+        return h, h
+
+    inps = (xs, ms) if as_ is None else (xs, ms, as_)
+    h, hs = jax.lax.scan(step, jnp.zeros((b, d_h), x.dtype), inps)
+    return h, jnp.moveaxis(hs, 0, 1)
+
+
+# --------------------------------------------------------------------------- #
+# param specs
+# --------------------------------------------------------------------------- #
+
+
+def param_specs(cfg: RecConfig) -> dict:
+    d = cfg.embed_dim
+    if cfg.model == "dlrm":
+        n_feat = cfg.n_sparse + 1
+        n_pairs = n_feat * (n_feat - 1) // 2
+        return {
+            "tables": P((cfg.n_sparse, cfg.table_rows, d), (None, "table_rows", None), "embed"),
+            "bot": _mlp_specs(cfg.n_dense, cfg.bot_mlp),
+            "top": _mlp_specs(cfg.bot_mlp[-1] + n_pairs, cfg.top_mlp),
+        }
+    if cfg.model == "wide_deep":
+        return {
+            "tables": P((cfg.n_sparse, cfg.table_rows, d), (None, "table_rows", None), "embed"),
+            "wide": P((cfg.n_sparse, cfg.table_rows, 1), (None, "table_rows", None), "embed"),
+            "deep": _mlp_specs(cfg.n_sparse * d, cfg.top_mlp),
+        }
+    # din / dien
+    pair = cfg.pair_dim
+    specs = {
+        "item_table": P((cfg.item_vocab, d), ("table_rows", None), "embed"),
+        "cate_table": P((cfg.cate_vocab, d), ("table_rows", None), "embed"),
+        "profile_tables": P((cfg.n_profile, cfg.profile_vocab, d), (None, "table_rows", None), "embed"),
+    }
+    head_in = 3 * pair + cfg.n_profile * d
+    if cfg.model == "din":
+        specs["attn"] = _mlp_specs(4 * pair, cfg.attn_mlp + (1,))
+        specs["head"] = _mlp_specs(head_in, cfg.mlp + (1,))
+    else:  # dien
+        specs["gru1"] = _gru_specs(pair, cfg.gru_dim)
+        specs["augru"] = _gru_specs(cfg.gru_dim, cfg.gru_dim)
+        specs["t_proj"] = P((pair, cfg.gru_dim), ("embed", None))
+        specs["attn"] = _mlp_specs(2 * cfg.gru_dim, cfg.attn_mlp + (1,))
+        specs["head"] = _mlp_specs(cfg.gru_dim + 2 * pair + cfg.n_profile * d, cfg.mlp + (1,))
+    return specs
+
+
+def init(cfg: RecConfig, key):
+    return init_params(param_specs(cfg), key)
+
+
+def abstract(cfg: RecConfig):
+    return abstract_params(param_specs(cfg))
+
+
+def axes(cfg: RecConfig):
+    return axes_tree(param_specs(cfg))
+
+
+# --------------------------------------------------------------------------- #
+# forwards
+# --------------------------------------------------------------------------- #
+
+
+def _dlrm_forward(params, batch, cfg: RecConfig):
+    dense = batch["dense"].astype(cfg.dtype)
+    v = _mlp(params["bot"], dense, len(cfg.bot_mlp), final_act=True)      # (B, d)
+    e = emb.lookup_stacked(params["tables"], batch["sparse"])             # (B, T, d)
+    z = jnp.concatenate([v[:, None, :], e.astype(cfg.dtype)], axis=1)     # (B, T+1, d)
+    zz = jnp.einsum("bid,bjd->bij", z, z)
+    n = z.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    pairs = zz[:, iu, ju]                                                 # (B, n(n-1)/2)
+    top_in = jnp.concatenate([v, pairs], axis=-1)
+    return _mlp(params["top"], top_in, len(cfg.top_mlp))[:, 0]
+
+
+def _wide_deep_forward(params, batch, cfg: RecConfig):
+    ids = batch["sparse"]
+    e = emb.lookup_stacked(params["tables"], ids).astype(cfg.dtype)       # (B, T, d)
+    wide = emb.lookup_stacked(params["wide"], ids).astype(cfg.dtype)      # (B, T, 1)
+    deep_in = e.reshape(e.shape[0], -1)
+    deep = _mlp(params["deep"], deep_in, len(cfg.top_mlp))[:, 0]
+    return deep + wide.sum(axis=(1, 2))
+
+
+def _din_user_vec(params, hist, target, mask, cfg: RecConfig):
+    """Target attention (DIN): hist (B,L,P), target (B,P) -> (B,P)."""
+    t = jnp.broadcast_to(target[:, None, :], hist.shape)
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    w = _mlp(params["attn"], feat, len(cfg.attn_mlp) + 1)[..., 0]         # (B, L)
+    w = w * mask.astype(w.dtype)
+    return jnp.einsum("bl,blp->bp", w, hist)
+
+
+def _hist_embed(params, batch, cfg: RecConfig):
+    hi = emb.lookup(params["item_table"], batch["hist_items"]).astype(cfg.dtype)
+    hc = emb.lookup(params["cate_table"], batch["hist_cates"]).astype(cfg.dtype)
+    hist = jnp.concatenate([hi, hc], axis=-1)                             # (B, L, P)
+    ti = emb.lookup(params["item_table"], batch["target_item"]).astype(cfg.dtype)
+    tc = emb.lookup(params["cate_table"], batch["target_cate"]).astype(cfg.dtype)
+    target = jnp.concatenate([ti, tc], axis=-1)                           # (B, P)
+    prof = emb.lookup_stacked(params["profile_tables"], batch["profile"]).astype(cfg.dtype)
+    prof = prof.reshape(prof.shape[0], -1)                                # (B, n_profile*d)
+    mask = jnp.arange(batch["hist_items"].shape[1])[None, :] < batch["hist_len"][:, None]
+    return hist, target, prof, mask
+
+
+def _din_forward(params, batch, cfg: RecConfig):
+    hist, target, prof, mask = _hist_embed(params, batch, cfg)
+    user = _din_user_vec(params, hist, target, mask, cfg)
+    x = jnp.concatenate([user, target, user * target, prof], axis=-1)
+    return _mlp(params["head"], x, len(cfg.mlp) + 1)[:, 0]
+
+
+def _dien_forward(params, batch, cfg: RecConfig):
+    hist, target, prof, mask = _hist_embed(params, batch, cfg)
+    _, hs = _gru_scan(params["gru1"], hist, mask)                         # (B, L, H)
+    tproj = (target @ params["t_proj"].astype(target.dtype))[:, None, :]  # (B,1,H)
+    feat = jnp.concatenate([hs, jnp.broadcast_to(tproj, hs.shape)], axis=-1)
+    scores = _mlp(params["attn"], feat, len(cfg.attn_mlp) + 1)[..., 0]
+    scores = jnp.where(mask, scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1) * mask.astype(scores.dtype)       # (B, L)
+    hfinal, _ = _gru_scan(params["augru"], hs, mask, a=a)
+    x = jnp.concatenate([hfinal, target, target, prof], axis=-1)
+    return _mlp(params["head"], x, len(cfg.mlp) + 1)[:, 0]
+
+
+FORWARDS = {
+    "dlrm": _dlrm_forward,
+    "wide_deep": _wide_deep_forward,
+    "din": _din_forward,
+    "dien": _dien_forward,
+}
+
+
+def forward(params, batch, cfg: RecConfig):
+    logit = FORWARDS[cfg.model](params, batch, cfg)
+    return shard(logit, "batch")
+
+
+def loss_fn(params, batch, cfg: RecConfig):
+    logit = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss, {"bce": loss}
+
+
+def serve(params, batch, cfg: RecConfig):
+    return jax.nn.sigmoid(forward(params, batch, cfg))
+
+
+# --------------------------------------------------------------------------- #
+# retrieval scoring: 1 query vs n_candidates, batched + global top-k
+# --------------------------------------------------------------------------- #
+
+
+def retrieval_topk(params, batch, cfg: RecConfig, k: int = 100):
+    """batch carries the single query context + candidate ids (C,).
+
+    Candidate tensors are model-axis shardable ("candidates" rule); scoring is
+    one batched forward, never a loop.
+    """
+    cand = batch["cand_items"]                                            # (C,)
+    c = cand.shape[0]
+    k = min(k, c)
+    if cfg.model in ("din", "dien"):
+        q = {kk: jnp.broadcast_to(v, (c,) + v.shape[1:]) for kk, v in batch.items()
+             if kk in ("hist_items", "hist_cates", "hist_len", "profile")}
+        q["target_item"] = cand
+        q["target_cate"] = batch["cand_cates"]
+        logit = FORWARDS[cfg.model](params, q, cfg)
+    elif cfg.model == "dlrm":
+        sparse = jnp.broadcast_to(batch["sparse"], (c, cfg.n_sparse)).at[:, 0].set(cand)
+        dense = jnp.broadcast_to(batch["dense"], (c, cfg.n_dense))
+        logit = _dlrm_forward(params, {"dense": dense, "sparse": sparse}, cfg)
+    else:
+        sparse = jnp.broadcast_to(batch["sparse"], (c, cfg.n_sparse)).at[:, 0].set(cand)
+        logit = _wide_deep_forward(params, {"sparse": sparse}, cfg)
+    logit = shard(logit, "candidates")
+    scores, idx = jax.lax.top_k(logit, k)
+    return scores, cand[idx]

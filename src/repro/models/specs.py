@@ -1,0 +1,78 @@
+"""Parameter specs with logical sharding axes (MaxText-style).
+
+Every parameter is declared once as ``P(shape, axes)`` where ``axes`` are
+*logical* names ("embed", "heads", "ffn", "expert", "vocab", ...).  The
+distribution layer maps logical names -> mesh axes per architecture
+(repro.distributed.sharding), so the same model code runs single-device,
+single-pod (16x16) and multi-pod (2x16x16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple                      # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: Optional[float] = None    # None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: P, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    scale = spec.scale
+    if scale is None:
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    if spec.init == "embed":
+        scale = 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(specs, key) -> Any:
+    """Materialize a pytree of P specs into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct tree (for dry-run / eval_shape paths)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+                        is_leaf=is_spec)
+
+
+def axes_tree(specs) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_layers(specs, n_layers: int) -> Any:
+    """Add a scanned leading 'layers' dim to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: P((n_layers,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

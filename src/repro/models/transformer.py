@@ -1,0 +1,422 @@
+"""Decoder-only LM covering the assigned architectures:
+
+  * GQA dense (starcoder2-3b/7b, smollm-135m)
+  * MLA + fine-grained MoE with shared experts (deepseek-v2-lite)
+  * GQA + SWA + MoE (mixtral-8x22b)
+
+One code path, three entry points: ``loss_fn`` (training), ``prefill``
+(build KV caches for a full sequence), ``decode_step`` (one token against a
+cache).  Layers are scanned (stacked params) with rematerialization; logits /
+cross-entropy are computed in sequence chunks so the (B, S, V) tensor never
+materializes.  All sharding is via logical axes (distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from . import attention as attn_lib
+from . import moe as moe_lib
+from .common import apply_rope, cross_entropy, rmsnorm
+from .specs import P, abstract_params, axes_tree, init_params, stack_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"                 # "gqa" | "mla"
+    window: Optional[int] = None      # SWA window
+    expand_kv: bool = False           # replicate KV heads to full H under TP
+                                      # (Megatron behaviour; needed when
+                                      # neither KH nor H/KH divides the axis)
+    rope_theta: float = 10000.0
+    # MLA dims (deepseek-v2-lite)
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    # MoE
+    n_experts: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_dense_layers: int = 0           # leading dense layers (deepseek: 1)
+    capacity_factor: float = 1.25
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32    # bf16 halves ZeRO-3 gather bytes (HC2)
+    q_chunk: Optional[int] = 1024     # None -> kv-scan only (SP-friendly)
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    aux_weight: float = 0.01
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers if self.moe else 0
+
+    @property
+    def qk_dim(self) -> int:
+        return (self.qk_nope + self.qk_rope) if self.attn == "mla" else self.head_dim
+
+
+# --------------------------------------------------------------------------- #
+# parameter specs
+# --------------------------------------------------------------------------- #
+
+
+def _attn_specs(cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    if cfg.attn == "mla":
+        return {
+            "wq": P((d, cfg.n_heads, cfg.qk_nope + cfg.qk_rope), ("embed", "heads", None)),
+            "w_dkv": P((d, cfg.kv_lora + cfg.qk_rope), ("embed", None)),
+            "kv_norm": P((cfg.kv_lora,), (None,), "ones"),
+            "w_uk": P((cfg.n_heads, cfg.kv_lora, cfg.qk_nope), ("heads", None, None)),
+            "w_uv": P((cfg.n_heads, cfg.kv_lora, cfg.v_head), ("heads", None, None)),
+            "wo": P((cfg.n_heads, cfg.v_head, d), ("heads", None, "embed")),
+        }
+    return {
+        "wq": P((d, cfg.n_heads, cfg.head_dim), ("embed", "heads", None)),
+        "wk": P((d, cfg.n_kv, cfg.head_dim), ("embed", "kv_heads", None)),
+        "wv": P((d, cfg.n_kv, cfg.head_dim), ("embed", "kv_heads", None)),
+        "wo": P((cfg.n_heads, cfg.head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _dense_ffn_specs(cfg: LMConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    return {
+        "w1": P((d, d_ff), ("embed", "ffn")),
+        "w3": P((d, d_ff), ("embed", "ffn")),
+        "w2": P((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def _moe_ffn_specs(cfg: LMConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    out = {
+        "router": P((d, e), ("embed", None)),
+        "w1": P((e, d, f), ("expert", "embed", "ffn_expert")),
+        "w3": P((e, d, f), ("expert", "embed", "ffn_expert")),
+        "w2": P((e, f, d), ("expert", "ffn_expert", "embed")),
+    }
+    if cfg.n_shared:
+        out["shared"] = _dense_ffn_specs(cfg, cfg.n_shared * f)
+    return out
+
+
+def _layer_specs(cfg: LMConfig, moe: bool) -> dict:
+    d = cfg.d_model
+    return {
+        "attn_norm": P((d,), (None,), "ones"),
+        "ffn_norm": P((d,), (None,), "ones"),
+        "attn": _attn_specs(cfg),
+        "ffn": _moe_ffn_specs(cfg) if moe else _dense_ffn_specs(cfg, cfg.d_ff),
+    }
+
+
+def param_specs(cfg: LMConfig) -> dict:
+    specs = {
+        "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "final_norm": P((cfg.d_model,), (None,), "ones"),
+    }
+    n_dense = cfg.n_dense_layers if cfg.moe else cfg.n_layers
+    if n_dense:
+        specs["dense_layers"] = stack_layers(_layer_specs(cfg, moe=False), n_dense)
+    if cfg.n_moe_layers:
+        specs["moe_layers"] = stack_layers(_layer_specs(cfg, moe=True), cfg.n_moe_layers)
+    if cfg.param_dtype != jnp.float32:
+        import dataclasses as _dc
+        specs = jax.tree.map(
+            lambda s: _dc.replace(s, dtype=cfg.param_dtype), specs,
+            is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def init(cfg: LMConfig, key) -> dict:
+    return init_params(param_specs(cfg), key)
+
+
+def abstract(cfg: LMConfig) -> dict:
+    return abstract_params(param_specs(cfg))
+
+
+def axes(cfg: LMConfig) -> dict:
+    return axes_tree(param_specs(cfg))
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+
+
+def _gqa_attention(p, h, pos, cfg: LMConfig):
+    c = lambda w: w.astype(h.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", h, c(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", h, c(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", h, c(p["wv"]))
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = shard(q, "batch", "act_seq_attn", "act_heads", None)
+    kv_out = (k, v)
+    if cfg.expand_kv and cfg.n_kv != cfg.n_heads:
+        rep = cfg.n_heads // cfg.n_kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    o = attn_lib.full_attention(q, k, v, causal=True, window=cfg.window,
+                                q_chunk=cfg.q_chunk or 1 << 30, kv_chunk=cfg.kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, c(p["wo"])), kv_out
+
+
+def _mla_attention(p, h, pos, cfg: LMConfig):
+    c = lambda w: w.astype(h.dtype)
+    b, s, _ = h.shape
+    q = jnp.einsum("bsd,dhk->bshk", h, c(p["wq"]))
+    q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    lat_all = jnp.einsum("bsd,dl->bsl", h, c(p["w_dkv"]))
+    lat = rmsnorm(lat_all[..., : cfg.kv_lora], p["kv_norm"])
+    k_rope = apply_rope(lat_all[..., None, cfg.kv_lora:], pos, cfg.rope_theta)  # (B,S,1,Dr)
+    k_nope = jnp.einsum("bsl,hln->bshn", lat, c(p["w_uk"]))
+    v = jnp.einsum("bsl,hlv->bshv", lat, c(p["w_uv"]))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, cfg.qk_rope))], axis=-1)
+    q_full = shard(q_full, "batch", "act_seq_attn", "act_heads", None)
+    o = attn_lib.full_attention(q_full, k_full, v, causal=True, window=cfg.window,
+                                q_chunk=cfg.q_chunk or 1 << 30, kv_chunk=cfg.kv_chunk)
+    return jnp.einsum("bshv,hvd->bsd", o, c(p["wo"])), (lat, k_rope[:, :, 0, :])
+
+
+def _dense_ffn(p, h):
+    c = lambda w: w.astype(h.dtype)
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, c(p["w1"])))
+    up = jnp.einsum("bsd,df->bsf", h, c(p["w3"]))
+    hidden = shard(gate * up, "batch", "act_seq_ffn", "act_ffn")
+    return jnp.einsum("bsf,fd->bsd", hidden, c(p["w2"]))
+
+
+def _moe_ffn(p, h, cfg: LMConfig):
+    out, aux = moe_lib.moe_ffn(
+        h, p["router"], p["w1"], p["w3"], p["w2"],
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+    if cfg.n_shared:
+        out = out + _dense_ffn(p["shared"], h)
+    return out, aux
+
+
+def _layer(p, x, pos, cfg: LMConfig, moe: bool, collect_cache: bool):
+    h = rmsnorm(x, p["attn_norm"])
+    attn_fn = _mla_attention if cfg.attn == "mla" else _gqa_attention
+    a, kv = attn_fn(p["attn"], h, pos, cfg)
+    x = shard(x + a, "batch", "act_seq", "act_embed")
+    h = rmsnorm(x, p["ffn_norm"])
+    if moe:
+        f, aux = _moe_ffn(p["ffn"], h, cfg)
+    else:
+        f, aux = _dense_ffn(p["ffn"], h), jnp.float32(0.0)
+    x = shard(x + f, "batch", "act_seq", "act_embed")
+    return x, aux, (kv if collect_cache else None)
+
+
+# --------------------------------------------------------------------------- #
+# trunk / loss
+# --------------------------------------------------------------------------- #
+
+
+def _run_stack(params_stack, x, pos, cfg: LMConfig, moe: bool, collect_cache: bool):
+    def body(carry, lp):
+        y, aux, cache = _layer(lp, carry, pos, cfg, moe, collect_cache)
+        return y, (aux, cache) if collect_cache else (aux, 0)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, (auxs, caches) = jax.lax.scan(body, x, params_stack)
+    return x, jnp.sum(auxs), caches
+
+
+def trunk(params, tokens, cfg: LMConfig, collect_cache: bool = False):
+    """tokens (B, S) -> final-normed activations (B, S, D) [+ caches]."""
+    s = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard(x, "batch", "act_seq", "act_embed")
+    pos = jnp.arange(s)
+    aux_total = jnp.float32(0.0)
+    caches = {}
+    if "dense_layers" in params:
+        x, aux, c = _run_stack(params["dense_layers"], x, pos, cfg, False, collect_cache)
+        aux_total += aux
+        caches["dense"] = c
+    if "moe_layers" in params:
+        x, aux, c = _run_stack(params["moe_layers"], x, pos, cfg, True, collect_cache)
+        aux_total += aux
+        caches["moe"] = c
+    x = rmsnorm(x, params["final_norm"])
+    return x, aux_total, caches
+
+
+def loss_fn(params, tokens, labels, cfg: LMConfig):
+    """Chunked cross entropy: the (B,S,V) logits tensor never materializes."""
+    x, aux, _ = trunk(params, tokens, cfg)
+    b, s, d = x.shape
+    ck = min(cfg.loss_chunk, s)
+    while s % ck:
+        ck -= 1
+    xc = jnp.moveaxis(x.reshape(b, s // ck, ck, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, s // ck, ck), 1, 0)
+    emb = params["embed"]
+
+    def step(tot, inp):
+        xs, ys = inp
+        logits = jnp.einsum("bcd,vd->bcv", xs, emb.astype(xs.dtype))
+        logits = shard(logits, "batch", None, "vocab")
+        lz = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32), ys[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lz - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.float32(0.0), (xc, yc))
+    loss = tot / (b * s)
+    return loss + cfg.aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# serving: prefill + decode
+# --------------------------------------------------------------------------- #
+
+
+def cache_spec(cfg: LMConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs of the decode cache (for input_specs / allocation)."""
+    eff = min(cache_len, cfg.window) if cfg.window else cache_len
+    l = cfg.n_layers
+    if cfg.attn == "mla":
+        return {
+            "lat": jax.ShapeDtypeStruct((l, batch, eff, cfg.kv_lora), cfg.dtype),
+            "rope": jax.ShapeDtypeStruct((l, batch, eff, cfg.qk_rope), cfg.dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((l, batch, eff, cfg.n_kv, cfg.head_dim), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((l, batch, eff, cfg.n_kv, cfg.head_dim), cfg.dtype),
+    }
+
+
+def cache_axes(cfg: LMConfig):
+    if cfg.attn == "mla":
+        return {"lat": (None, "batch", "act_cache", None),
+                "rope": (None, "batch", "act_cache", None)}
+    return {"k": (None, "batch", "act_cache", "kv_heads", None),
+            "v": (None, "batch", "act_cache", "kv_heads", None)}
+
+
+def prefill(params, tokens, cfg: LMConfig):
+    """Full-sequence forward; returns last-position logits + stacked caches."""
+    x, _, caches = trunk(params, tokens, cfg, collect_cache=True)
+    last = x[:, -1, :]
+    logits = jnp.einsum("bd,vd->bv", last, params["embed"].astype(x.dtype))
+    stacked = _merge_cache_stacks(caches, cfg)
+    if cfg.window:  # keep only the trailing window (ring layout, slot = pos % W)
+        s = tokens.shape[1]
+        w = min(cfg.window, s)
+        slots = (jnp.arange(s - w, s)) % w
+
+        def ring(c):
+            tail = c[:, :, -w:]
+            return jnp.zeros_like(tail).at[:, :, slots].set(tail)
+
+        stacked = jax.tree.map(ring, stacked)
+    return logits, stacked
+
+
+def _merge_cache_stacks(caches, cfg: LMConfig):
+    """Concatenate dense-stack and moe-stack caches into (L, B, S, ...)."""
+    parts = [c for c in (caches.get("dense"), caches.get("moe")) if c is not None]
+    names = ("lat", "rope") if cfg.attn == "mla" else ("k", "v")
+    out = {}
+    for i, name in enumerate(names):
+        arrs = [p[i] for p in parts]
+        # scan ys come out (L, B, S, ...) already; kv from _gqa is (B,S,KH,hd)
+        out[name] = jnp.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
+    return out
+
+
+def decode_step(params, cache, token, pos, cfg: LMConfig):
+    """One-token decode. token (B,) int32; pos: scalar int32 count of cached
+    positions.  Returns (logits (B,V), updated cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)[:, None, :]
+    x = shard(x, "batch", None, "act_embed")
+    w = cache[next(iter(cache))].shape[2]
+    slot = (pos % w) if cfg.window else pos
+    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+
+    n_dense = cfg.n_dense_layers if cfg.moe else cfg.n_layers
+
+    def layer_at(stack_name, li, x, cache):
+        lp = jax.tree.map(lambda a: a[li], params[stack_name])
+        moe = stack_name == "moe_layers"
+        h = rmsnorm(x, lp["attn_norm"])
+        c = lambda wgt: wgt.astype(h.dtype)
+        gi = li if stack_name == "dense_layers" else li + n_dense
+        if cfg.attn == "mla":
+            ap = lp["attn"]
+            q = jnp.einsum("bsd,dhk->bshk", h, c(ap["wq"]))
+            q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope:]
+            q_rope = apply_rope(q_rope, pos_arr, cfg.rope_theta)
+            lat_all = jnp.einsum("bsd,dl->bsl", h, c(ap["w_dkv"]))
+            lat = rmsnorm(lat_all[..., : cfg.kv_lora], ap["kv_norm"])
+            k_rope = apply_rope(lat_all[..., None, cfg.kv_lora:], pos_arr, cfg.rope_theta)[:, :, 0]
+            lat_c = jax.lax.dynamic_update_slice(cache["lat"], lat[None].astype(cfg.dtype),
+                                                 (gi, 0, slot, 0))
+            rope_c = jax.lax.dynamic_update_slice(cache["rope"], k_rope[None].astype(cfg.dtype),
+                                                  (gi, 0, slot, 0))
+            cache = {"lat": lat_c, "rope": rope_c}
+            o = attn_lib.mla_decode_attention(
+                q_nope[:, 0], q_rope[:, 0], lat_c[gi], rope_c[gi],
+                jnp.minimum(pos + 1, w), ap["w_uk"].astype(cfg.dtype), ap["w_uv"].astype(cfg.dtype))
+            a = jnp.einsum("bshv,hvd->bsd", o, c(ap["wo"]))
+        else:
+            ap = lp["attn"]
+            q = apply_rope(jnp.einsum("bsd,dhk->bshk", h, c(ap["wq"])), pos_arr, cfg.rope_theta)
+            k = apply_rope(jnp.einsum("bsd,dhk->bshk", h, c(ap["wk"])), pos_arr, cfg.rope_theta)
+            v = jnp.einsum("bsd,dhk->bshk", h, c(ap["wv"]))
+            k_c = jax.lax.dynamic_update_slice(cache["k"], k[None].astype(cfg.dtype), (gi, 0, slot, 0, 0))
+            v_c = jax.lax.dynamic_update_slice(cache["v"], v[None].astype(cfg.dtype), (gi, 0, slot, 0, 0))
+            cache = {"k": k_c, "v": v_c}
+            o = attn_lib.decode_attention(q, k_c[gi], v_c[gi], jnp.minimum(pos + 1, w),
+                                          window=None)  # ring layout already bounds SWA
+            a = jnp.einsum("bshk,hkd->bsd", o, c(ap["wo"]))
+        x = x + a
+        h2 = rmsnorm(x, lp["ffn_norm"])
+        if moe:
+            f, _ = _moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            f = _dense_ffn(lp["ffn"], h2)
+        return x + f, cache
+
+    if n_dense:
+        def dense_body(li, carry):
+            x, cache = carry
+            return layer_at("dense_layers", li, x, cache)
+        x, cache = jax.lax.fori_loop(0, n_dense, dense_body, (x, cache))
+    if cfg.n_moe_layers:
+        def moe_body(li, carry):
+            x, cache = carry
+            return layer_at("moe_layers", li, x, cache)
+        x, cache = jax.lax.fori_loop(0, cfg.n_moe_layers, moe_body, (x, cache))
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"].astype(x.dtype))
+    return shard(logits, "batch", "vocab"), cache

@@ -1,0 +1,2 @@
+from . import adamw  # noqa: F401
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr  # noqa: F401

@@ -1,0 +1,91 @@
+"""AdamW from scratch (no optax in this environment): decoupled weight decay,
+global-norm clipping, cosine schedule with linear warmup.  Optimizer state
+mirrors the parameter pytree (and inherits its sharding)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(step, cfg: AdamWConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _needs_master(params) -> bool:
+    return any(x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+
+
+def adamw_init(params):
+    """m/v in fp32.  When working params are low-precision (bf16 ZeRO-3 —
+    halves the weight all-gather wire bytes, EXPERIMENTS.md §Perf HC2), a
+    fp32 master copy rides in the optimizer state."""
+    opt = {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if _needs_master(params):
+        opt["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return opt
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt, cfg: AdamWConfig):
+    step = opt["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = cosine_lr(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        ref = master if master is not None else p.astype(jnp.float32)
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * ref
+        new_master = ref - lr * step_
+        return new_master.astype(p.dtype), m, v, new_master
+
+    has_master = "master" in opt
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    flat_ma = jax.tree.leaves(opt["master"]) if has_master else [None] * len(flat_p)
+    new = [upd(p, g, m, v, ma) for p, g, m, v, ma in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    params = jax.tree.unflatten(tdef, [n[0] for n in new])
+    m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    out = {"m": m, "v": v, "step": step}
+    if has_master:
+        out["master"] = jax.tree.unflatten(tdef, [n[3] for n in new])
+    return params, out, {"grad_norm": gn, "lr": lr}

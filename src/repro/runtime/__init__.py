@@ -1,0 +1,1 @@
+from . import trainer, train_loop  # noqa: F401

@@ -1,0 +1,86 @@
+"""Train-step factories.
+
+Two paths:
+
+  * ``make_train_step`` — global-jit GSPMD: loss -> grad -> AdamW; gradients
+    are reduced by XLA-inserted collectives per the sharding plan (FSDP/TP/
+    EP/SP).  Used by the dry-run and the full-scale launcher.
+
+  * ``make_compressed_dp_train_step`` — shard_map manual over the DP axes
+    ("pod","data"), auto over "model": per-device grads are synchronized with
+    the COMPRESSED all-reduce (int8/int4 + error feedback, collectives.py) —
+    the paper's bit packing applied to the gradient exchange.  Params are
+    replicated over DP (TP/EP still available via the auto axis).  The
+    error-feedback residual rides in the optimizer state and is checkpointed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as PS
+
+from repro.distributed.collectives import compressed_psum_mean
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig, grad_transform=None):
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    grad_transform (optional): applied to the grad tree before the update —
+    e.g. constraining grads to the parameter shardings so GSPMD emits
+    reduce-scatters instead of full fp32 all-reduces (§Perf HC2 iteration 2).
+    """
+
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt, om = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, {"loss": loss, **metrics, **om}
+
+    return step
+
+
+def make_compressed_dp_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                                  mesh, batch_specs, dp_axes=("pod", "data"),
+                                  bits: int = 8, auto_axes=("model",)):
+    """Manual-DP trainer with compressed gradient all-reduce.
+
+    batch_specs: pytree of PartitionSpecs for the batch (DP axes only).
+    Params/opt replicated over DP.  Returns (step_fn, init_opt_fn).
+    """
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    auto = frozenset(a for a in auto_axes if a in mesh.shape)
+
+    def init_opt(params):
+        opt = adamw_init(params)
+        opt["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return opt
+
+    def local_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        if bits is None:                      # uncompressed control (fp32 pmean)
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g.astype(jnp.float32), dp), grads)
+            ef = opt["ef"]
+        else:
+            grads, ef = compressed_psum_mean(grads, dp, bits=bits, error_feedback=opt["ef"])
+        loss = jax.lax.pmean(loss, dp)
+        opt_core = {"m": opt["m"], "v": opt["v"], "step": opt["step"]}
+        params, opt_core, om = adamw_update(params, grads, opt_core, opt_cfg)
+        opt_core["ef"] = ef
+        return params, opt_core, {"loss": loss, **metrics, **om}
+
+    rep = PS()
+    step = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(rep, rep, batch_specs),
+        out_specs=(rep, rep, rep),
+        axis_names=frozenset(dp),            # manual over DP; "model" stays auto
+        check_vma=False,
+    )
+    return step, init_opt

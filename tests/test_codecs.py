@@ -1,0 +1,156 @@
+"""Round-trip + equivalence tests for every codec (numpy oracle, JAX scalar,
+JAX vectorized), including hypothesis property tests on the system invariant
+decode(encode(x)) == x."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec
+from repro.core import dgap, layout
+from repro.core.bits import ebw_np, pack_bits_np, gather_bits_np, unary_stream_np, unary_decode_np
+
+RNG = np.random.default_rng(42)
+
+CASES = {
+    "uniform_small": RNG.integers(0, 256, 4096).astype(np.uint32),
+    "zipf_tail": np.minimum(RNG.zipf(1.3, 4096), 2**27 - 1).astype(np.uint32),
+    "dgap_like": RNG.geometric(0.3, 4096).astype(np.uint32),
+    "zeros": np.zeros(100, np.uint32),
+    "all_max27": np.full(130, 2**27 - 1, np.uint32),
+    "single": np.array([7], np.uint32),
+    "len2": np.array([0, 2**20], np.uint32),
+    "exceptions": np.where(RNG.random(4096) < 0.08,
+                            RNG.integers(1 << 20, 1 << 27, 4096),
+                            RNG.integers(0, 64, 4096)).astype(np.uint32),
+    "ramp": np.arange(1, 1000, dtype=np.uint32),
+}
+
+ALL = codec.names()
+GROUP = codec.names(group_only=True)
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("case", list(CASES))
+def test_roundtrip_numpy(name, case):
+    spec = codec.get(name)
+    x = CASES[case]
+    if x.size and int(x.max()) >= 2**spec.max_bits:
+        pytest.skip("value range unsupported by codec (paper §4.1.2)")
+    enc = spec.encode(x)
+    out = spec.decode(enc)
+    np.testing.assert_array_equal(out, x)
+    assert enc.n == len(x)
+    assert enc.total_bits >= 0
+
+
+@pytest.mark.parametrize("name", GROUP)
+def test_group_jax_decoders_match_oracle(name):
+    spec = codec.get(name)
+    if spec.jax_args is None:
+        pytest.skip("numpy/kernel-path codec (bp_tpu decodes via kernels/ref)")
+    for case, x in CASES.items():
+        if x.size and int(x.max()) >= 2**spec.max_bits:
+            continue
+        enc = spec.encode(x)
+        args = spec.jax_args(enc)
+        vec = np.asarray(spec.decode_jax_vec(**args))
+        np.testing.assert_array_equal(vec, x, err_msg=f"{name}/{case}/vec")
+        sca = np.asarray(spec.decode_jax_scalar(**args))
+        np.testing.assert_array_equal(sca, x, err_msg=f"{name}/{case}/scalar")
+
+
+def test_empty_input_all_codecs():
+    x = np.zeros(0, np.uint32)
+    for name in ALL:
+        spec = codec.get(name)
+        out = spec.decode(spec.encode(x))
+        assert out.size == 0, name
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis property tests
+# --------------------------------------------------------------------------- #
+
+uint27_arrays = st.lists(st.integers(0, 2**27 - 1), min_size=0, max_size=300).map(
+    lambda v: np.asarray(v, np.uint32))
+uint32_arrays = st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=300).map(
+    lambda v: np.asarray(v, np.uint32))
+
+# fast codecs get the full sweep; python-loop codecs get a lighter one
+FAST = [n for n in ALL if n not in ("g8iu", "rice", "gamma", "simple9", "simple16")]
+
+
+@settings(max_examples=25, deadline=None)
+@given(uint27_arrays)
+def test_property_roundtrip_small_values(x):
+    for name in FAST:
+        spec = codec.get(name)
+        np.testing.assert_array_equal(spec.decode(spec.encode(x)), x, err_msg=name)
+
+
+@settings(max_examples=15, deadline=None)
+@given(uint32_arrays)
+def test_property_roundtrip_full_range(x):
+    for name in FAST:
+        spec = codec.get(name)
+        if x.size and int(x.max()) >= 2**spec.max_bits:
+            continue
+        np.testing.assert_array_equal(spec.decode(spec.encode(x)), x, err_msg=name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(uint27_arrays)
+def test_property_group_vec_equals_scalar(x):
+    for name in ("group_simple", "group_scheme_8-IU", "group_scheme_1-CU", "group_pfd", "bp128"):
+        spec = codec.get(name)
+        enc = spec.encode(x)
+        if enc.n == 0:
+            continue
+        args = spec.jax_args(enc)
+        np.testing.assert_array_equal(
+            np.asarray(spec.decode_jax_vec(**args)),
+            np.asarray(spec.decode_jax_scalar(**args)), err_msg=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200))
+def test_property_dgap_roundtrip(v):
+    x = np.sort(np.asarray(v, np.uint32))
+    g = dgap.dgap_encode_np(x)
+    np.testing.assert_array_equal(dgap.dgap_decode_np(g), x)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(1, 64)), min_size=1, max_size=200))
+def test_property_bitstream_roundtrip(pairs):
+    vals = np.asarray([v & ((1 << b) - 1) for v, b in pairs], np.uint64)
+    lens = np.asarray([b for _, b in pairs], np.int64)
+    readable = lens <= 32      # gather reads up to 32 bits
+    words, total = pack_bits_np(vals, lens)
+    assert total == int(lens.sum())
+    offs = np.cumsum(lens) - lens
+    got = gather_bits_np(words, offs[readable], lens[readable])
+    np.testing.assert_array_equal(got, vals[readable].astype(np.uint32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=300))
+def test_property_unary_roundtrip(counts):
+    c = np.asarray(counts, np.int64)
+    words, total = unary_stream_np(c)
+    np.testing.assert_array_equal(unary_decode_np(words, total, len(c)), c)
+
+
+# --------------------------------------------------------------------------- #
+# paper-claim sanity: quad-max OR trick preserves effective bit width (§4.4)
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=4, max_size=64))
+def test_property_pseudo_quadmax_same_ebw(v):
+    x = np.asarray(v, np.uint32)
+    pseudo = layout.quadmax_np(x, 4, pseudo=True)
+    true = layout.quadmax_np(x, 4, pseudo=False)
+    np.testing.assert_array_equal(ebw_np(pseudo), ebw_np(true))

@@ -1,0 +1,86 @@
+"""Fault-tolerance: crash/resume bit-exactness, corruption detection,
+straggler watchdog."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import train_loop as TL
+from repro.runtime.trainer import make_train_step
+
+
+def _setup():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(64, 4)).astype(np.float32)
+    Y = (X @ np.asarray([1., -2., 3., .5], np.float32)).astype(np.float32)
+
+    def batch_iter(cursor):
+        i = cursor % 4
+        return {"x": jnp.asarray(X[i * 16:(i + 1) * 16]),
+                "y": jnp.asarray(Y[i * 16:(i + 1) * 16])}, cursor + 1
+
+    ocfg = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=40, weight_decay=0.0)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    p0 = {"w": jnp.zeros(4), "b": jnp.zeros(())}
+    return step, p0, batch_iter
+
+
+def test_crash_resume_bit_exact():
+    step, p0, batch_iter = _setup()
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        cfg = TL.LoopConfig(total_steps=40, ckpt_dir=d1, ckpt_every=10, log_every=1000)
+        pA, _, _ = TL.run(step, p0, adamw_init(p0), batch_iter, cfg, log_fn=lambda *a: None)
+        cfg2 = TL.LoopConfig(total_steps=40, ckpt_dir=d2, ckpt_every=10,
+                             log_every=1000, crash_at_step=23)
+        with pytest.raises(RuntimeError):
+            TL.run(step, p0, adamw_init(p0), batch_iter, cfg2, log_fn=lambda *a: None)
+        cfg3 = TL.LoopConfig(total_steps=40, ckpt_dir=d2, ckpt_every=10, log_every=1000)
+        pB, _, _ = TL.run(step, p0, adamw_init(p0), batch_iter, cfg3, log_fn=lambda *a: None)
+        for k in pA:
+            np.testing.assert_array_equal(np.asarray(pA[k]), np.asarray(pB[k]))
+
+
+def test_corrupted_checkpoint_detected_and_skipped():
+    step, p0, batch_iter = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        state = (p0, adamw_init(p0))
+        ck.save(10, state, {"cursor": 10})
+        ck.save(20, state, {"cursor": 20})
+        # corrupt the newest checkpoint's array blob
+        path = os.path.join(d, "step_000020", "arrays.npz")
+        with open(path, "r+b") as f:
+            f.seek(200)
+            f.write(b"\xde\xad\xbe\xef" * 8)
+        restored, step_got, extra = ck.restore(state)
+        assert step_got == 10 and extra["cursor"] == 10
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    dog = TL.StragglerWatchdog(factor=3.0)
+    for i in range(10):
+        dog.observe(i, 0.01)
+    assert dog.observe(10, 0.2)          # 20x the EMA -> flagged
+    assert len(dog.flagged) == 1
+    assert not dog.observe(11, 0.012)
+
+
+def test_checkpoint_gc_keeps_last_k():
+    step, p0, _ = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"w": jnp.zeros(3)}, {})
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_"))
+        assert steps == [3, 4]
+        assert latest_step(d) == 4

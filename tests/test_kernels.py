@@ -1,0 +1,85 @@
+"""Per-kernel shape/bit-width sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bitpack, ops, quadmax, ref, scan_add, unpack_delta
+
+RNG = np.random.default_rng(7)
+BWS = [1, 2, 3, 4, 5, 6, 7, 8, 9, 11, 12, 13, 16, 17, 20, 24, 27, 31, 32]
+
+
+def _tiles(n_frames: int, bw: int) -> jnp.ndarray:
+    x = RNG.integers(0, 2**bw, n_frames * bitpack.FRAME_INTS, dtype=np.uint64).astype(np.uint32)
+    return jnp.asarray(x.reshape(n_frames * bitpack.FRAME_ROWS, bitpack.LANES))
+
+
+@pytest.mark.parametrize("bw", BWS)
+def test_pack_matches_ref(bw):
+    t = _tiles(2, bw)
+    got = bitpack.pack_frames(t, bw, interpret=True, frames_per_block=1)
+    want = ref.pack_frames_ref(t, bw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bw", BWS)
+def test_unpack_roundtrip(bw):
+    t = _tiles(3, bw)
+    packed = ref.pack_frames_ref(t, bw)
+    got = bitpack.unpack_frames(packed, bw, interpret=True, frames_per_block=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(t))
+
+
+@pytest.mark.parametrize("frames", [1, 2, 5, 8])
+def test_frame_or_matches_ref(frames):
+    t = _tiles(frames, 32)
+    got = quadmax.frame_or(t, interpret=True, frames_per_block=2)
+    want = ref.frame_or_ref(t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rows,rpb", [(8, 8), (64, 16), (96, 32), (256, 256)])
+def test_prefix_sum_matches_ref(rows, rpb):
+    x = jnp.asarray(RNG.integers(0, 2**20, rows * 128, dtype=np.uint64)
+                    .astype(np.uint32).reshape(rows, 128))
+    got = scan_add.prefix_sum_blocks(x, rows_per_block=rpb, interpret=True)
+    want = ref.prefix_sum_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prefix_sum_uint32_wraparound():
+    x = jnp.full((8, 128), 2**31, jnp.uint32)
+    got = scan_add.prefix_sum_blocks(x, rows_per_block=8, interpret=True)
+    want = ref.prefix_sum_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bw", [1, 5, 8, 13, 17, 32])
+def test_fused_unpack_delta_matches_ref(bw):
+    t = _tiles(2, bw)
+    packed = ref.pack_frames_ref(t, bw)
+    got = unpack_delta.unpack_delta_frames(packed, bw, interpret=True, frames_per_block=2)
+    want = ref.unpack_delta_ref(packed, bw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 3), st.integers(0, 4095))
+def test_property_stream_roundtrip(bw, frames, tail):
+    n = (frames - 1) * 4096 + tail + 1
+    x = RNG.integers(0, 2**bw, n, dtype=np.uint64).astype(np.uint32)
+    xj = jnp.asarray(x)
+    packed = ops.pack_stream(xj, bw)
+    out = ops.unpack_stream(packed, bw, n)
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+def test_select_bw_matches_effective_width():
+    # each frame gets values of a known max width
+    widths = [3, 11, 26]
+    xs = [RNG.integers(2**(w - 1), 2**w, 4096, dtype=np.uint64).astype(np.uint32) for w in widths]
+    x = jnp.asarray(np.concatenate(xs))
+    got = np.asarray(ops.select_bw(x))
+    np.testing.assert_array_equal(got, widths)
