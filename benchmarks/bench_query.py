@@ -1,5 +1,7 @@
 """Table X analogue: query processing rate (queries/second) per codec over
-the compressed inverted index (AND + OR BM25 top-10, warm cache)."""
+the compressed inverted index (AND + OR BM25 top-10, warm cache), plus the
+batched-engine mode: queries/sec at batch sizes {1, 16, 256} against the seed
+per-query ``np.isin`` loop (``and_query_ref``)."""
 
 from __future__ import annotations
 
@@ -7,19 +9,27 @@ import numpy as np
 
 from repro.data import synth
 from repro.index.invindex import InvertedIndex
+from repro.index.engine import QueryBatch, QueryEngine
 from repro.index import query as Q
 from .util import emit, timeit
 
 CODECS = ["group_simple", "group_scheme_8-IU", "group_pfd", "bp128",
-          "group_afor", "varbyte", "simple9", "pfordelta", "afor", "gvb"]
+          "group_afor", "varbyte", "stream_vbyte", "simple9", "pfordelta",
+          "afor", "gvb"]
+
+BATCH_SIZES = (1, 16, 256)
+
+
+def make_queries(postings: dict, n_queries: int, seed: int = 3) -> list:
+    rng = np.random.default_rng(seed)
+    terms = sorted(postings)
+    return [rng.choice(terms[:120], size=rng.integers(2, 4), replace=False).tolist()
+            for _ in range(n_queries)]
 
 
 def run(n_queries: int = 100, dataset: str = "gov2") -> None:
     doclen, postings = synth.make_corpus(dataset)
-    rng = np.random.default_rng(3)
-    terms = sorted(postings)
-    queries = [rng.choice(terms[:120], size=rng.integers(2, 4), replace=False).tolist()
-               for _ in range(n_queries)]
+    queries = make_queries(postings, n_queries)
     for name in CODECS:
         idx = InvertedIndex.build(doclen, postings, codec=name)
 
@@ -35,6 +45,39 @@ def run(n_queries: int = 100, dataset: str = "gov2") -> None:
         emit(f"query/{dataset}/{name}/and", t * 1e6, f"{n_queries / t:.1f}qps")
         t = timeit(run_or, repeats=3, warmup=1)
         emit(f"query/{dataset}/{name}/or", t * 1e6, f"{(n_queries // 4) / t:.1f}qps")
+    # batched mode needs enough queries sharing terms to expose cache reuse —
+    # keep the canonical 256 except under CI smoke sizing (n_queries <= 20)
+    run_batched(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 256)
+
+
+def run_batched(dataset: str = "gov2", codec: str = "group_simple",
+                n_queries: int = 256) -> None:
+    """Batched engine vs the seed scalar loop; prints qps per batch size."""
+    doclen, postings = synth.make_corpus(dataset)
+    queries = make_queries(postings, n_queries)
+    idx = InvertedIndex.build(doclen, postings, codec=codec)
+
+    def seed_loop():
+        for q in queries:
+            Q.and_query_ref(idx, q)
+
+    t_ref = timeit(seed_loop, repeats=3, warmup=1)
+    emit(f"query/{dataset}/{codec}/and_seed_loop", t_ref * 1e6,
+         f"{n_queries / t_ref:.1f}qps")
+
+    for bs in BATCH_SIZES:
+        batches = [queries[i:i + bs] for i in range(0, len(queries), bs)]
+
+        def run_engine():
+            # fresh engine per repeat: cold cache, so the measurement includes
+            # every decode the batch actually pays for
+            eng = QueryEngine(idx)
+            for b in batches:
+                eng.execute(QueryBatch(b, mode="and"))
+
+        t = timeit(run_engine, repeats=3, warmup=1)
+        emit(f"query/{dataset}/{codec}/and_batched_{bs}", t * 1e6,
+             f"{n_queries / t:.1f}qps,{t_ref / t:.1f}x")
 
 
 if __name__ == "__main__":

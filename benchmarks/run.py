@@ -7,30 +7,38 @@ stream lengths (slower); default sizes finish on a laptop-class CPU.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` (script mode) as well as `-m benchmarks.run`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized quick pass (tiny streams, fast suites only)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: speed ratio gsc query index opt pipeline roofline")
     args = ap.parse_args()
-    n = 1 << 21 if args.full else 1 << 18
+    n = 1 << 21 if args.full else (1 << 14 if args.smoke else 1 << 18)
     suites = {
         "ratio": lambda: __import__("benchmarks.bench_ratio", fromlist=["run"]).run(),
         "gsc": lambda: __import__("benchmarks.bench_group_scheme", fromlist=["run"]).run(n=max(n >> 1, 1 << 16)),
         "speed": lambda: __import__("benchmarks.bench_speed", fromlist=["run"]).run(n=n),
         "opt": lambda: __import__("benchmarks.bench_optimizations", fromlist=["run"]).run(n=n),
         "query": lambda: __import__("benchmarks.bench_query", fromlist=["run"]).run(
-            n_queries=200 if args.full else 60),
+            n_queries=200 if args.full else (20 if args.smoke else 60)),
         "index": lambda: __import__("benchmarks.bench_index_size", fromlist=["run"]).run(),
         "pipeline": lambda: __import__("benchmarks.bench_pipeline", fromlist=["run"]).run(
             n_tokens=max(n >> 1, 1 << 16)),
         "roofline": lambda: __import__("benchmarks.bench_roofline", fromlist=["run"]).run(),
     }
-    todo = args.only or list(suites)
+    todo = args.only or (["speed", "query", "index"] if args.smoke else list(suites))
     print("name,us_per_call,derived")
     failed = []
     for key in todo:

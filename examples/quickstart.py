@@ -3,7 +3,8 @@
   1. encode/decode posting-list d-gaps with every Group codec,
   2. compare scalar vs vectorized decode (the paper's central axis),
   3. run the TPU-layout Pallas kernels (interpret mode on CPU),
-  4. build + query a compressed inverted index.
+  4. build + query a compressed inverted index,
+  5. serve a query batch through the fused decode-and-intersect engine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +18,7 @@ from repro.core import codec as codec_lib
 from repro.core.dgap import dgap_encode_np
 from repro.data import synth
 from repro.index.invindex import InvertedIndex
+from repro.index.engine import QueryBatch, QueryEngine
 from repro.index import query as Q
 from repro.kernels import ops
 
@@ -59,6 +61,20 @@ def main() -> None:
     hits = Q.and_query_scored(idx, [1, 5], k=5)
     print(f"\nindex: {idx.size_bytes()/1e6:.2f} MB (group_simple); "
           f"AND(1,5) top hit doc={hits[0][0]} bm25={hits[0][1]:.2f}")
+
+    # batched serving: many queries per call, shared decoded-block LRU
+    rng = np.random.default_rng(0)
+    terms = sorted(postings)
+    queries = [rng.choice(terms[:100], size=3, replace=False).tolist()
+               for _ in range(256)]
+    engine = QueryEngine(idx, cache_blocks=4096)
+    t0 = time.perf_counter()
+    results = engine.execute(QueryBatch(queries, mode="and"))
+    dt = time.perf_counter() - t0
+    st = engine.cache.stats()
+    print(f"batched engine: {len(queries)} AND queries in {dt*1e3:.1f} ms "
+          f"({len(queries)/dt:.0f} qps); block cache {st['hits']} hits / "
+          f"{st['misses']} misses; first result has {len(results[0])} docs")
 
 
 if __name__ == "__main__":

@@ -8,11 +8,12 @@ Public API:
 """
 
 from . import (bits, bp128, bp_tpu, codec, dgap, frames, group_afor,
-               group_pfd, group_scheme, group_simple, group_vse, layout, scalar)
+               group_pfd, group_scheme, group_simple, group_vse, layout,
+               scalar, stream_vbyte)
 from .encoded import Encoded
 
 __all__ = [
     "bits", "bp128", "bp_tpu", "codec", "dgap", "frames", "group_afor",
     "group_pfd", "group_scheme", "group_simple", "group_vse", "layout",
-    "scalar", "Encoded",
+    "scalar", "stream_vbyte", "Encoded",
 ]

@@ -44,6 +44,10 @@ def _reg(spec: CodecSpec) -> None:
 
 # ---- scalar baselines ------------------------------------------------------ #
 _reg(CodecSpec("varbyte", "byte", scalar.vb_encode, scalar.vb_decode))
+from . import stream_vbyte  # noqa: E402
+_reg(CodecSpec("stream_vbyte", "byte", stream_vbyte.encode, stream_vbyte.decode_np,
+               stream_vbyte.jax_args, stream_vbyte.decode_jax_scalar,
+               stream_vbyte.decode_jax_vec))
 _reg(CodecSpec("gvb", "byte", scalar.gvb_encode, scalar.gvb_decode))
 _reg(CodecSpec("g8iu", "byte", scalar.g8iu_encode, scalar.g8iu_decode))
 _reg(CodecSpec("g8cu", "byte", scalar.g8cu_encode, scalar.g8cu_decode))

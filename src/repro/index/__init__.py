@@ -1,1 +1,22 @@
-from . import invindex, query  # noqa: F401
+"""Compressed inverted index + query serving.
+
+Layers (bottom up):
+
+  * ``invindex`` — per-term blocked storage: d-gapped docids + TFs compressed
+    with any codec from ``repro.core.codec.REGISTRY``; lists shorter than 64
+    use the Stream VByte short-list fast path.  Every 512-posting block keeps
+    its first docid as a skip pointer and decodes independently.
+  * ``query`` — stateless one-shot AND/OR/BM25 helpers.
+  * ``engine`` — the batched query engine: ``QueryBatch`` groups queries by
+    term overlap, AND queries fuse skip-table block pruning with the
+    vectorized intersection kernels (``repro.kernels.intersect``), and hot
+    decoded blocks live in an LRU keyed by (term, block) so a batch decodes
+    each block at most once.
+
+Adding a codec: implement ``encode(np.uint32[N]) -> Encoded`` and
+``decode(Encoded) -> np.uint32[N]`` (plus optional JAX scalar/vec decoders),
+register a ``CodecSpec`` in ``repro/core/codec.py``, and the index, engine,
+differential tests, and benchmarks pick it up by name automatically.
+"""
+
+from . import engine, invindex, query  # noqa: F401

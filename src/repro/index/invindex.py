@@ -1,9 +1,17 @@
 """Compressed inverted index (paper §7.4/§7.5).
 
 Per term: d-gapped docids + TFs compressed with a selected codec; posting
-lists shorter than 64 fall back to Variable Byte (paper §7.5).  Block-level
-skip pointers every 512 postings (first docid + compressed offsets per block)
-support AND-query skipping without decoding whole lists.
+lists shorter than 64 fall back to Stream VByte (the byte-oriented short-list
+fast path — the paper's §7.5 VByte fallback upgraded to a separated-control
+layout that decodes branch-free).  Block-level skip pointers every 512
+postings (first docid + compressed blocks) support AND-query skipping without
+decoding whole lists.
+
+The block is also the unit of the batched query engine
+(``repro.index.engine``): ``decode_block`` decompresses exactly one block, and
+``block_firsts`` exposes the skip table so the engine can prune blocks by
+candidate docid range *before* any decompression happens (fused
+decode-and-intersect).
 """
 
 from __future__ import annotations
@@ -17,6 +25,7 @@ from repro.core.dgap import dgap_decode_np, dgap_encode_np
 
 SKIP = 512
 SHORT = 64
+SHORT_CODEC = "stream_vbyte"
 
 
 @dataclasses.dataclass
@@ -38,10 +47,10 @@ class InvertedIndex:
     @staticmethod
     def build(doclen: np.ndarray, postings: dict, codec: str = "group_simple") -> "InvertedIndex":
         spec = codec_lib.get(codec)
-        vb = codec_lib.get("varbyte")
+        short = codec_lib.get(SHORT_CODEC)
         terms = {}
         for t, (docids, tfs) in postings.items():
-            use = spec if len(docids) >= SHORT else vb
+            use = spec if len(docids) >= SHORT else short
             blocks = []
             for i in range(0, len(docids), SKIP):
                 ids = docids[i:i + SKIP]
@@ -52,18 +61,38 @@ class InvertedIndex:
             terms[t] = TermPostings(len(docids), blocks)
         return InvertedIndex(codec, terms, len(doclen), np.asarray(doclen))
 
+    def n_blocks(self, t: int) -> int:
+        return len(self.terms[t].blocks)
+
+    def block_firsts(self, t: int) -> np.ndarray:
+        """Skip table: first docid of each block of term t (ascending)."""
+        return np.asarray([b[0] for b in self.terms[t].blocks], np.int64)
+
+    def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
+        """Decompress only the docids of one block (AND queries skip TFs)."""
+        first, encg, _ = self.terms[t].blocks[bi]
+        gaps = codec_lib.get(encg.codec).decode(encg)
+        return dgap_decode_np(gaps) + np.uint32(first)
+
+    def decode_block_tfs(self, t: int, bi: int) -> np.ndarray:
+        _, _, enct = self.terms[t].blocks[bi]
+        return codec_lib.get(enct.codec).decode(enct)
+
+    def decode_block(self, t: int, bi: int):
+        """Decompress exactly one posting block -> (docids, tfs)."""
+        return self.decode_block_ids(t, bi), self.decode_block_tfs(t, bi)
+
     def decode_term(self, t: int, min_docid: int = 0):
         """Decode postings, skipping blocks entirely below min_docid."""
         tp = self.terms[t]
         ids_out, tf_out = [], []
-        for bi, (first, encg, enct) in enumerate(tp.blocks):
+        for bi in range(len(tp.blocks)):
             nxt = tp.blocks[bi + 1][0] if bi + 1 < len(tp.blocks) else None
             if nxt is not None and nxt <= min_docid:
                 continue                         # skip pointer: whole block below
-            gaps = codec_lib.get(encg.codec).decode(encg)
-            ids = dgap_decode_np(gaps) + np.uint32(first)
+            ids, tfs = self.decode_block(t, bi)
             ids_out.append(ids)
-            tf_out.append(codec_lib.get(enct.codec).decode(enct))
+            tf_out.append(tfs)
         if not ids_out:
             return np.zeros(0, np.uint32), np.zeros(0, np.uint32)
         return np.concatenate(ids_out), np.concatenate(tf_out)

@@ -1,21 +1,46 @@
-"""Query evaluation over the compressed index (paper §7.4).
+"""One-shot query evaluation over the compressed index (paper §7.4).
 
-AND queries: ascending-df intersection with block skipping; OR queries: BM25
-DAAT accumulation with top-k heap (k=10).  Decoding d-gaps and TFs dominates
-the codec-dependent cost, exactly as in the paper (15-35% of total)."""
+AND queries: ascending-df fused decode-and-intersect (skip-table block
+pruning + the vectorized intersection kernels in ``repro.kernels.intersect``);
+OR queries: BM25 DAAT accumulation with top-k (k=10).  These helpers are
+stateless — each call runs on an uncached :class:`repro.index.engine.
+QueryEngine`.  For batched serving (many queries, shared decoded-block LRU)
+use ``QueryEngine``/``QueryBatch`` directly.
+
+``and_query_ref`` keeps the seed scalar path (full per-term decode +
+``np.isin``) as the correctness/throughput baseline.
+"""
 
 from __future__ import annotations
 
-import heapq
-
 import numpy as np
 
+from .engine import K1, B, QueryEngine  # noqa: F401  (re-export BM25 constants)
 from .invindex import InvertedIndex
 
-K1, B = 1.2, 0.75
+
+def _engine(idx: InvertedIndex) -> QueryEngine:
+    return QueryEngine(idx, cache_blocks=0, cache_score_terms=0)
 
 
 def and_query(idx: InvertedIndex, terms: list) -> np.ndarray:
+    return _engine(idx).and_query(terms)
+
+
+def or_query(idx: InvertedIndex, terms: list, k: int = 10):
+    return _engine(idx).or_query(terms, k)
+
+
+def and_query_scored(idx: InvertedIndex, terms: list, k: int = 10):
+    return _engine(idx).and_query_scored(terms, k)
+
+
+def bm25_scores(idx: InvertedIndex, t: int):
+    return _engine(idx).term_scores(t)
+
+
+def and_query_ref(idx: InvertedIndex, terms: list) -> np.ndarray:
+    """Seed baseline: full decode per term + scalar ``np.isin`` intersection."""
     terms = sorted((t for t in terms if t in idx.terms), key=lambda t: idx.terms[t].df)
     if not terms:
         return np.zeros(0, np.uint32)
@@ -26,41 +51,3 @@ def and_query(idx: InvertedIndex, terms: list) -> np.ndarray:
         cand, _ = idx.decode_term(t, min_docid=int(ids[0]))
         ids = ids[np.isin(ids, cand, assume_unique=True)]
     return ids
-
-
-def bm25_scores(idx: InvertedIndex, t: int):
-    ids, tfs = idx.decode_term(t)
-    df = idx.terms[t].df
-    idf = np.log(1.0 + (idx.n_docs - df + 0.5) / (df + 0.5))
-    dl = idx.doclen[ids]
-    avdl = idx.doclen.mean()
-    tf = tfs.astype(np.float64)
-    return ids, idf * tf * (K1 + 1) / (tf + K1 * (1 - B + B * dl / avdl))
-
-
-def or_query(idx: InvertedIndex, terms: list, k: int = 10):
-    acc = {}
-    for t in terms:
-        if t not in idx.terms:
-            continue
-        ids, sc = bm25_scores(idx, t)
-        for d, s in zip(ids.tolist(), sc.tolist()):
-            acc[d] = acc.get(d, 0.0) + s
-    return heapq.nlargest(k, acc.items(), key=lambda kv: kv[1])
-
-
-def and_query_scored(idx: InvertedIndex, terms: list, k: int = 10):
-    docs = and_query(idx, terms)
-    if len(docs) == 0:
-        return []
-    scores = np.zeros(len(docs))
-    for t in terms:
-        if t not in idx.terms:
-            continue
-        ids, sc = bm25_scores(idx, t)
-        pos = np.searchsorted(ids, docs)
-        pos = np.clip(pos, 0, len(ids) - 1)
-        hit = ids[pos] == docs
-        scores += np.where(hit, sc[pos], 0.0)
-    order = np.argsort(-scores)[:k]
-    return [(int(docs[i]), float(scores[i])) for i in order]

@@ -11,7 +11,18 @@ first).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit/auto axis types; older jax has implicit Auto only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    """Mesh kwargs asking for Auto axis types, on jax versions that have them."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,8 +38,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)")
     import numpy as np
     dev_array = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(dev_array, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
@@ -36,4 +46,4 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     import numpy as np
     ndev = int(np.prod(shape))
     dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(dev, axes, **_axis_kwargs(len(axes)))

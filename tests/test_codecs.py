@@ -24,6 +24,12 @@ CASES = {
                             RNG.integers(1 << 20, 1 << 27, 4096),
                             RNG.integers(0, 64, 4096)).astype(np.uint32),
     "ramp": np.arange(1, 1000, dtype=np.uint32),
+    # adversarial corpus for the differential sweep
+    "all_max32": np.full(40, 2**32 - 1, np.uint32),
+    "single_outlier": np.concatenate([RNG.integers(0, 8, 1280, dtype=np.int64),
+                                      [1 << 26]]).astype(np.uint32)[RNG.permutation(1281)],
+    "odd_len_257": RNG.integers(0, 1 << 16, 257, dtype=np.int64).astype(np.uint32),
+    "block_minus_1": RNG.integers(0, 1 << 10, 127, dtype=np.int64).astype(np.uint32),
 }
 
 ALL = codec.names()
@@ -58,6 +64,31 @@ def test_group_jax_decoders_match_oracle(name):
         np.testing.assert_array_equal(vec, x, err_msg=f"{name}/{case}/vec")
         sca = np.asarray(spec.decode_jax_scalar(**args))
         np.testing.assert_array_equal(sca, x, err_msg=f"{name}/{case}/scalar")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_differential_sweep(name):
+    """Every registered codec: decode(encode(x)) == x, and when JAX decoders
+    exist, decode_jax_scalar == decode_jax_vec == numpy oracle — over the
+    adversarial corpus (empty, all-zero, all-max, exception-heavy, lengths
+    not a multiple of the block size)."""
+    spec = codec.get(name)
+    sweep = ["zeros", "all_max27", "all_max32", "single", "exceptions",
+             "single_outlier", "odd_len_257", "block_minus_1"]
+    for case in sweep + ["empty"]:
+        x = np.zeros(0, np.uint32) if case == "empty" else CASES[case]
+        if x.size and int(x.max()) >= 2**spec.max_bits:
+            continue
+        enc = spec.encode(x)
+        oracle = spec.decode(enc)
+        np.testing.assert_array_equal(oracle, x, err_msg=f"{name}/{case}/oracle")
+        if spec.jax_args is None or enc.n == 0:
+            continue
+        args = spec.jax_args(enc)
+        np.testing.assert_array_equal(np.asarray(spec.decode_jax_vec(**args)), x,
+                                      err_msg=f"{name}/{case}/vec")
+        np.testing.assert_array_equal(np.asarray(spec.decode_jax_scalar(**args)), x,
+                                      err_msg=f"{name}/{case}/scalar")
 
 
 def test_empty_input_all_codecs():

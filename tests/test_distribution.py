@@ -26,7 +26,8 @@ def test_compressed_allreduce_matches_pmean():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as PS
     from repro.distributed import collectives as C
-    mesh = jax.make_mesh((8,), ('dp',), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh((8,), ('dp',))
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8*5000,)).astype(np.float32))
     from jax.experimental.shard_map import shard_map
     def f(xl):

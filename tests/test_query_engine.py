@@ -1,0 +1,205 @@
+"""Batched query engine: exact parity with brute force across all registered
+codecs, the stream_vbyte short-list path, the decoded-block LRU (hit and
+eviction paths), and the intersection kernels."""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core import codec
+from repro.index.invindex import SHORT, SHORT_CODEC, InvertedIndex
+from repro.index.engine import B, K1, BlockCache, QueryBatch, QueryEngine
+from repro.index import query as Q
+from repro.kernels import intersect
+
+RNG = np.random.default_rng(11)
+N_DOCS = 2000
+
+
+def small_corpus():
+    """Synthetic index inputs small enough to build with every codec,
+    including the python-loop scalar baselines: 12 terms, df 10..900 (both
+    short-list and multi-block terms)."""
+    doclen = RNG.integers(50, 400, N_DOCS).astype(np.int64)
+    postings = {}
+    for t, df in enumerate([10, 20, 40, 63, 64, 120, 300, 500, 700, 900, 55, 250]):
+        ids = np.sort(RNG.choice(N_DOCS, df, replace=False)).astype(np.uint32)
+        tfs = RNG.geometric(0.4, df).astype(np.uint32)
+        postings[t] = (ids, tfs)
+    return doclen, postings
+
+
+DOCLEN, POSTINGS = small_corpus()
+QUERIES = [RNG.choice(12, size=int(RNG.integers(2, 4)), replace=False).tolist()
+           for _ in range(24)]
+
+
+def brute_and(postings, terms):
+    out = None
+    for t in terms:
+        ids = postings[t][0]
+        out = ids if out is None else np.intersect1d(out, ids)
+    return out.astype(np.uint32)
+
+
+def brute_or_topk(doclen, postings, n_docs, terms, k):
+    avdl = doclen.mean()
+    acc = {}
+    for t in terms:
+        ids, tfs = postings[t]
+        df = len(ids)
+        idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
+        tf = tfs.astype(np.float64)
+        sc = idf * tf * (K1 + 1) / (tf + K1 * (1 - B + B * doclen[ids] / avdl))
+        for d, s in zip(ids.tolist(), sc.tolist()):
+            acc[d] = acc.get(d, 0.0) + s
+    return heapq.nlargest(k, acc.items(), key=lambda kv: kv[1])
+
+
+@pytest.mark.parametrize("name", codec.names())
+def test_batched_and_or_match_bruteforce(name):
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
+    eng = QueryEngine(idx)
+    got = eng.execute(QueryBatch(QUERIES, mode="and"))
+    for q, res in zip(QUERIES, got):
+        np.testing.assert_array_equal(res, brute_and(POSTINGS, q),
+                                      err_msg=f"{name}/{q}")
+        assert res.dtype == np.uint32
+    top = eng.execute(QueryBatch(QUERIES[:6], mode="or", k=8))
+    for q, res in zip(QUERIES[:6], top):
+        want = brute_or_topk(DOCLEN, POSTINGS, N_DOCS, q, 8)
+        assert len(res) == len(want)
+        np.testing.assert_allclose(sorted(s for _, s in res),
+                                   sorted(s for _, s in want), rtol=1e-12)
+        assert all(res[i][1] >= res[i + 1][1] for i in range(len(res) - 1))
+
+
+def test_short_lists_use_stream_vbyte():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    for t, (ids, _) in POSTINGS.items():
+        enc_codec = idx.terms[t].blocks[0][1].codec
+        if len(ids) < SHORT:
+            assert enc_codec == SHORT_CODEC, (t, len(ids))
+        else:
+            assert enc_codec == "group_simple", (t, len(ids))
+    # short-list-only AND goes entirely through the stream_vbyte path
+    got = QueryEngine(idx).and_query([0, 1, 2])
+    np.testing.assert_array_equal(got, brute_and(POSTINGS, [0, 1, 2]))
+
+
+def test_one_shot_helpers_match_seed_reference():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_pfd")
+    for q in QUERIES:
+        np.testing.assert_array_equal(Q.and_query(idx, q), Q.and_query_ref(idx, q))
+        scored = Q.and_query_scored(idx, q, k=5)
+        docs = Q.and_query(idx, q)
+        assert len(scored) == min(5, len(docs))
+    # unknown terms are ignored, all-unknown -> empty
+    assert len(Q.and_query(idx, [999])) == 0
+    assert Q.or_query(idx, [999]) == []
+
+
+def test_block_cache_hit_and_eviction_paths():
+    c = BlockCache(2)
+    assert c.get((0, 0, 0)) is None
+    c.put((0, 0, 0), "a")
+    c.put((0, 1, 0), "b")
+    assert c.get((0, 0, 0)) == "a"          # hit refreshes LRU order
+    c.put((0, 2, 0), "c")                   # evicts (0,1,0), the LRU entry
+    assert c.get((0, 1, 0)) is None
+    assert c.get((0, 0, 0)) == "a"
+    assert c.evictions == 1 and c.hits == 2
+    # capacity 0 disables caching entirely
+    c0 = BlockCache(0)
+    c0.put("k", "v")
+    assert c0.get("k") is None and len(c0) == 0
+
+
+def test_engine_cache_reuse_and_eviction_correctness():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    eng = QueryEngine(idx)
+    r1 = eng.execute(QueryBatch(QUERIES, mode="and"))
+    h1 = eng.cache.hits
+    r2 = eng.execute(QueryBatch(QUERIES, mode="and"))
+    assert eng.cache.hits > h1              # second pass served from cache
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a, b)
+    # a pathologically small cache must evict constantly yet stay exact
+    tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1)
+    r3 = tiny.execute(QueryBatch(QUERIES, mode="and"))
+    assert tiny.cache.evictions > 0
+    for a, b in zip(r1, r3):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_zero_posting_term_does_not_crash():
+    postings = dict(POSTINGS)
+    postings[99] = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))
+    idx = InvertedIndex.build(DOCLEN, postings, codec="group_simple")
+    eng = QueryEngine(idx)
+    assert len(eng.and_query([99])) == 0
+    assert len(eng.and_query([99, 0])) == 0
+    assert eng.or_query([99]) == []
+
+
+def test_single_term_result_mutation_does_not_corrupt_cache():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    eng = QueryEngine(idx)
+    r = eng.and_query([5])
+    assert r.flags.writeable                 # results are caller-owned
+    r[0] = 12345
+    np.testing.assert_array_equal(eng.and_query([5]), POSTINGS[5][0])
+    np.testing.assert_array_equal(eng.and_query([5, 9]), brute_and(POSTINGS, [5, 9]))
+    # cache-backed accessors hand out frozen arrays
+    with pytest.raises(ValueError):
+        eng.term_ids(5)[0] = 1
+
+
+def test_batch_results_align_with_input_order():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    eng = QueryEngine(idx)
+    queries = [[9, 8], [0, 1], [9, 8], [5, 6, 7], [0, 1]]
+    got = eng.execute(QueryBatch(queries, mode="and"))
+    for q, res in zip(queries, got):
+        np.testing.assert_array_equal(res, brute_and(POSTINGS, q))
+
+
+# --------------------------------------------------------------------------- #
+# intersection kernels
+# --------------------------------------------------------------------------- #
+
+
+def _sorted_unique(rng, n, hi):
+    return np.sort(rng.choice(hi, size=min(n, hi), replace=False)).astype(np.uint32)
+
+
+@pytest.mark.parametrize("na,nb,hi", [(0, 10, 100), (10, 0, 100), (5, 1000, 4000),
+                                      (300, 400, 600), (1000, 1000, 1 << 20),
+                                      (512, 4096, 5000)])
+def test_intersection_kernels_match_intersect1d(na, nb, hi):
+    rng = np.random.default_rng(na * 7919 + nb)
+    a, b = _sorted_unique(rng, na, hi), _sorted_unique(rng, nb, hi)
+    want = np.intersect1d(a, b)
+    np.testing.assert_array_equal(intersect.gallop_intersect_np(a, b), want)
+    np.testing.assert_array_equal(intersect.bitmap_intersect_np(a, b), want)
+    np.testing.assert_array_equal(intersect.intersect_sorted(a, b), want)
+
+
+def test_gallop_contains_jnp_matches_np():
+    rng = np.random.default_rng(0)
+    hay = _sorted_unique(rng, 500, 3000)
+    needles = _sorted_unique(rng, 200, 3000)
+    want = intersect.gallop_contains_np(hay, needles)
+    import jax.numpy as jnp
+    got = np.asarray(intersect.gallop_contains_jnp(jnp.asarray(hay), jnp.asarray(needles)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bitmap_and_pallas_kernel_matches_host():
+    rng = np.random.default_rng(1)
+    for nwords in (7, 128, 300):
+        wa = rng.integers(0, 1 << 32, nwords, dtype=np.uint64).astype(np.uint32)
+        wb = rng.integers(0, 1 << 32, nwords, dtype=np.uint64).astype(np.uint32)
+        got = intersect.bitmap_and_words(wa, wb, use_pallas=True)
+        np.testing.assert_array_equal(got, wa & wb)
