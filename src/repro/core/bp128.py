@@ -71,6 +71,29 @@ def decode_jax_vec(control, data, n: int, q: int, frame_quads: int):
     return unpack_data_jnp(data, bw_quads, n)
 
 
+def decode_arena_block(control: jnp.ndarray, data: jnp.ndarray,
+                       n_valid: jnp.ndarray, frame_quads: int) -> jnp.ndarray:
+    """Fixed-shape single-block decode for the device arena
+    (``repro.index.device``): padded static shapes + dynamic length, so a
+    work-list of (term, block) pairs decodes lane-parallel under ``vmap``.
+
+    control: (C_MAX,) int32 per-frame bit widths (rows >= the block's frame
+             count are arena slack; they are masked to bw=0 below).
+    data:    (W_MAX + 2, 4) uint32 words gathered from the data arena (slack
+             rows past the block are garbage but every read they feed is
+             masked by a bw=0 quad or sits below the value's mask).
+    n_valid: dynamic integer count of this block.
+    Returns (4 * C_MAX * frame_quads,) uint32 values, zero beyond ``n_valid``.
+    """
+    qmax = control.shape[0] * frame_quads
+    q = jnp.arange(qmax, dtype=jnp.int32)
+    q_len = (n_valid + 3) >> 2
+    bw_quads = jnp.where(q < q_len, control[q // frame_quads], 0)
+    out = unpack_data_jnp(data, bw_quads, 4 * qmax)
+    i = jnp.arange(4 * qmax, dtype=jnp.int32)
+    return jnp.where(i < n_valid, out, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "q", "frame_quads"))
 def decode_jax_scalar(control, data, n: int, q: int, frame_quads: int):
     bw_quads = jnp.repeat(control, frame_quads, total_repeat_length=max(q, 1))

@@ -185,6 +185,40 @@ def decode_jax_vec(sels: jnp.ndarray, data: jnp.ndarray, n: int) -> jnp.ndarray:
     return jnp.right_shift(word, k * bw) & MASKS_J[sel]
 
 
+def decode_arena_block(sels: jnp.ndarray, data: jnp.ndarray,
+                       p_len: jnp.ndarray, n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-shape single-block decode for the device arena
+    (``repro.index.device``): same gather formulation as ``decode_jax_vec``
+    but with *padded static shapes* and dynamic lengths, so a whole work-list
+    of (term, block) pairs decodes lane-parallel under one ``vmap``/``jit``.
+
+    sels: (P_MAX,) int32 selectors (rows >= p_len are arena slack, ignored).
+    data: (P_MAX, 4) uint32 vectors gathered from the data arena.
+    p_len, n_valid: dynamic vector / integer counts of this block.
+    Returns (4 * P_MAX,) uint32 values, zero beyond ``n_valid``.
+    """
+    pmax = sels.shape[0]
+    nmax = 4 * pmax
+    valid_p = jnp.arange(pmax, dtype=jnp.int32) < p_len
+    num = jnp.where(valid_p, NUM_J[sels], 0)
+    ends = jnp.cumsum(4 * num)
+    starts = ends - 4 * num
+    i = jnp.arange(nmax, dtype=jnp.int32)
+    marks = jnp.zeros(nmax, jnp.int32).at[
+        jnp.where(valid_p, starts, nmax)].add(1, mode="drop")
+    p = jnp.clip(jnp.cumsum(marks) - 1, 0, pmax - 1)
+    sel = sels[p]
+    local = i - starts[p]
+    k = (local >> 2).astype(jnp.uint32)
+    c = local & 3
+    bw = BW_J[sel].astype(jnp.uint32)
+    word = data.reshape(-1)[p * 4 + c]
+    # lanes past the decoded tail alias the last vector with huge `local`;
+    # clip the shift to stay defined, the value is masked out below anyway
+    vals = jnp.right_shift(word, jnp.minimum(k * bw, jnp.uint32(31))) & MASKS_J[sel]
+    return jnp.where(i < n_valid, vals, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def decode_jax_vec_scatter(sels: jnp.ndarray, data: jnp.ndarray, n: int) -> jnp.ndarray:
     """Original scatter formulation (first §Perf iteration baseline)."""

@@ -12,6 +12,12 @@ Layers (bottom up):
     vectorized intersection kernels (``repro.kernels.intersect``), and hot
     decoded blocks live in an LRU keyed by (term, block) so a batch decodes
     each block at most once.
+  * ``device`` — device-resident posting arenas: the compressed blocks
+    flattened into contiguous device arrays with per-(term, block)
+    offset/length/first-docid tables.  ``engine.to_device()`` switches the
+    serving path onto batched lane-parallel work-list decodes (one jitted
+    call per AND round, deduped across the batch) and optionally the fused
+    decode+bitmap-AND Pallas kernel (``repro.kernels.decode_fused``).
 
 Adding a codec: implement ``encode(np.uint32[N]) -> Encoded`` and
 ``decode(Encoded) -> np.uint32[N]`` (plus optional JAX scalar/vec decoders),
@@ -19,4 +25,4 @@ register a ``CodecSpec`` in ``repro/core/codec.py``, and the index, engine,
 differential tests, and benchmarks pick it up by name automatically.
 """
 
-from . import engine, invindex, query  # noqa: F401
+from . import device, engine, invindex, query  # noqa: F401

@@ -18,10 +18,21 @@ hardware-speed along three axes:
      hot (term, block) is decompressed once into an LRU cache
      (``BlockCache``) and reused across the whole batch.  BM25 per-term score
      vectors are cached the same way for OR queries.
+  4. **Device-resident execution** (``device=True`` / ``to_device()``) — the
+     compressed blocks live in ``repro.index.device.DeviceArena`` arenas; per
+     AND round the engine builds one (term, block, candidate-range) work-list
+     across the *whole batch* on host, dedupes hot blocks so each decodes at
+     most once per batch, and issues ONE jitted lane-parallel decode instead
+     of O(blocks) Python iterations.  With ``fused=True`` eligible term
+     intersections additionally run the ``kernels/decode_fused`` Pallas
+     kernel: decode + candidate bitmap-AND fused in VMEM, next block
+     prefetched.  Results are bit-identical to the host path.
 
 Typical use::
 
     engine = QueryEngine(idx, cache_blocks=4096)
+    results = engine.execute(QueryBatch(queries=[[1, 5], [2, 5, 9]], mode="and"))
+    engine.to_device()                       # device arenas from here on
     results = engine.execute(QueryBatch(queries=[[1, 5], [2, 5, 9]], mode="and"))
 """
 
@@ -36,6 +47,9 @@ from repro.kernels import intersect
 from .invindex import InvertedIndex
 
 K1, B = 1.2, 0.75
+
+_EMPTY_U32 = np.zeros(0, np.uint32)
+_EMPTY_U32.setflags(write=False)
 
 
 class BlockCache:
@@ -66,6 +80,14 @@ class BlockCache:
         self._d.move_to_end(key)
         self.hits += 1
         return v
+
+    def contains(self, key) -> bool:
+        """Membership probe that touches neither the LRU order nor the stats
+        (used by the device prefetch planner)."""
+        return key in self._d
+
+    def keys(self):
+        return list(self._d.keys())
 
     def put(self, key, value, cost: int = 1) -> None:
         if self.capacity <= 0:
@@ -104,11 +126,32 @@ class QueryBatch:
 
 class QueryEngine:
     def __init__(self, idx: InvertedIndex, cache_blocks: int = 4096,
-                 cache_score_terms: int = 512):
+                 cache_score_terms: int = 512, device: bool = False,
+                 fused: bool = False):
         self.idx = idx
         self.cache = BlockCache(cache_blocks)
         self.score_cache = BlockCache(cache_score_terms)
         self._avdl = float(np.asarray(idx.doclen).mean()) if idx.n_docs else 1.0
+        self.arena = None
+        self._fused = fused
+        self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
+                          "fallback_decodes": 0}
+        if device:
+            self.to_device(fused=fused)
+
+    def to_device(self, fused=None) -> "QueryEngine":
+        """Switch the engine onto the device-resident arenas: all subsequent
+        decodes go through batched lane-parallel device calls (with numpy
+        fallback per block for codecs the arena doesn't cover).  ``fused``
+        additionally routes eligible AND rounds through the fused
+        decode+bitmap-AND Pallas kernel; its tile arenas are only built (or
+        upgraded onto a cached arena) when actually requested."""
+        if fused is not None:
+            self._fused = fused
+        arena = self.idx.to_device(build_fused=self._fused)
+        if self.arena is None:
+            self.arena = arena
+        return self
 
     # ---- decode through the cache ------------------------------------------ #
     # Block entries are keyed (term, block, field) with field 0 = docids and
@@ -127,21 +170,27 @@ class QueryEngine:
         a.setflags(write=False)
         return a
 
-    def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
-        key = (t, bi, 0)
+    def _decode_block_field(self, t: int, bi: int, field: int) -> np.ndarray:
+        key = (t, bi, field)
         v = self.cache.get(key)
         if v is None:
-            v = self._freeze(self.idx.decode_block_ids(t, bi))
+            if self.arena is not None:
+                # cache-eviction stragglers outside the batched work-list
+                self.dev_stats["fallback_decodes"] += 1
+                v = self.arena.decode_blocks([key])[0]
+            elif field == 0:
+                v = self.idx.decode_block_ids(t, bi)
+            else:
+                v = self.idx.decode_block_tfs(t, bi)
+            v = self._freeze(v)
             self.cache.put(key, v)
         return v
 
+    def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
+        return self._decode_block_field(t, bi, 0)
+
     def decode_block_tfs(self, t: int, bi: int) -> np.ndarray:
-        key = (t, bi, 1)
-        v = self.cache.get(key)
-        if v is None:
-            v = self._freeze(self.idx.decode_block_tfs(t, bi))
-            self.cache.put(key, v)
-        return v
+        return self._decode_block_field(t, bi, 1)
 
     def decode_block(self, t: int, bi: int):
         return self.decode_block_ids(t, bi), self.decode_block_tfs(t, bi)
@@ -152,11 +201,43 @@ class QueryEngine:
         if v is None:
             nb = self.idx.n_blocks(t)
             if nb == 0:
-                return np.zeros(0, np.uint32)
+                # frozen like every other accessor result (zero-length, so one
+                # shared read-only singleton is contract-equivalent to caching)
+                return _EMPTY_U32
+            if self.arena is not None:
+                self._prefetch_blocks([(t, bi, field) for bi in range(nb)])
             parts = [decode_one(t, bi) for bi in range(nb)]
             v = self._freeze(parts[0] if nb == 1 else np.concatenate(parts))
             self.cache.put(key, v, cost=nb)
         return v
+
+    # ---- device prefetch planner ------------------------------------------- #
+
+    def _prefetch_blocks(self, entries: list) -> None:
+        """Dedupe a (term, block, field) work-list against the cache and
+        decode the misses in one batched arena call."""
+        missing, seen = [], set()
+        for e in entries:
+            if e in seen or self.cache.contains(e):
+                continue
+            seen.add(e)
+            missing.append(e)
+        self.dev_stats["worklist_decodes"] += len(missing)
+        if not missing:
+            return
+        for e, a in zip(missing, self.arena.decode_blocks(missing)):
+            self.cache.put(e, self._freeze(a))
+
+    def _prefetch_terms(self, terms, fields=(0, 1)) -> None:
+        entries = []
+        for t in terms:
+            if t not in self.idx.terms:
+                continue
+            nb = self.idx.n_blocks(t)
+            for f in fields:
+                if not self.cache.contains((t, -1, f)):
+                    entries.extend((t, bi, f) for bi in range(nb))
+        self._prefetch_blocks(entries)
 
     def term_ids(self, t: int) -> np.ndarray:
         return self._term_concat(t, 0, self.decode_block_ids)
@@ -169,23 +250,74 @@ class QueryEngine:
 
     # ---- fused decode-and-intersect ---------------------------------------- #
 
-    def _intersect_term(self, t: int, cand: np.ndarray) -> np.ndarray:
-        """Intersect sorted candidates with term t, decoding only the blocks
-        whose docid range [first_i, first_{i+1}) contains a candidate."""
+    def _block_plan(self, t: int, cand: np.ndarray):
+        """Skip-table pruning: candidate cut points per block of term t and
+        the indices of blocks whose docid range contains a candidate."""
         firsts = self.idx.block_firsts(t).astype(cand.dtype)  # avoid a cast copy
         cut = np.empty(len(firsts) + 1, np.int64)
         cut[:-1] = np.searchsorted(cand, firsts)
         cut[-1] = len(cand)
-        out = []
-        for bi in range(len(firsts)):
-            a, b = int(cut[bi]), int(cut[bi + 1])
-            if a == b:
-                continue                        # skip pointer: no candidates here
-            ids = self.decode_block_ids(t, bi)
-            out.append(intersect.intersect_sorted(ids, cand[a:b]))
-        if not out:
+        return cut, np.flatnonzero(cut[1:] > cut[:-1])
+
+    def _intersect_plan(self, t: int, cut: np.ndarray, sel: np.ndarray,
+                        cand: np.ndarray) -> np.ndarray:
+        if len(sel) == 0:
             return np.zeros(0, np.uint32)
+        if self._fused and self.arena is not None and self.arena.has_fused(t, sel):
+            return self.arena.fused_and(t, sel, cand)
+        out = [intersect.intersect_sorted(self.decode_block_ids(t, int(bi)),
+                                          cand[cut[bi]:cut[bi + 1]])
+               for bi in sel]
         return np.concatenate(out)
+
+    def _intersect_term(self, t: int, cand: np.ndarray) -> np.ndarray:
+        """Intersect sorted candidates with term t, decoding only the blocks
+        whose docid range [first_i, first_{i+1}) contains a candidate."""
+        cut, sel = self._block_plan(t, cand)
+        return self._intersect_plan(t, cut, sel, cand)
+
+    def and_many(self, queries: list) -> list:
+        """AND all queries together, round-batched for the device arenas.
+
+        Round r intersects every still-active query with its (r+1)-th rarest
+        term; the round's (term, block) needs across the WHOLE batch are
+        deduped and decoded in one arena call, so each hot block decodes at
+        most once per batch and the Python-loop count drops from O(total
+        selected blocks) to O(rounds).  Results are bit-identical to
+        ``and_query`` per query.
+        """
+        qterms = [sorted((t for t in q if t in self.idx.terms),
+                         key=lambda t: self.idx.terms[t].df) for q in queries]
+        for ts in qterms:               # raw seed-term block references,
+            if ts:                      # pre-dedup (work-list metric)
+                self.dev_stats["worklist_refs"] += self.idx.n_blocks(ts[0])
+        if self.arena is not None:
+            self._prefetch_terms({ts[0] for ts in qterms if ts}, fields=(0,))
+        cands = [self.term_ids(ts[0]) if ts else _EMPTY_U32 for ts in qterms]
+        owned = [False] * len(queries)
+        r = 1
+        while True:
+            active = [i for i, ts in enumerate(qterms)
+                      if len(ts) > r and len(cands[i])]
+            if not active:
+                break
+            plans, worklist = {}, []
+            for i in active:
+                t = qterms[i][r]
+                cut, sel = self._block_plan(t, cands[i])
+                plans[i] = (t, cut, sel)
+                self.dev_stats["worklist_refs"] += len(sel)
+                if self.arena is not None and not (
+                        self._fused and self.arena.has_fused(t, sel)):
+                    worklist.extend((t, int(bi), 0) for bi in sel)
+            if self.arena is not None:
+                self._prefetch_blocks(worklist)
+            for i in active:
+                t, cut, sel = plans[i]
+                cands[i] = self._intersect_plan(t, cut, sel, cands[i])
+                owned[i] = True
+            r += 1
+        return [c if o else c.copy() for c, o in zip(cands, owned)]
 
     def and_query(self, terms: list) -> np.ndarray:
         terms = sorted((t for t in terms if t in self.idx.terms),
@@ -234,8 +366,7 @@ class QueryEngine:
         top = top[np.argsort(-tot[top], kind="stable")]
         return [(int(docs[i]), float(tot[i])) for i in top]
 
-    def and_query_scored(self, terms: list, k: int = 10):
-        docs = self.and_query(terms)
+    def _score_docs(self, terms: list, docs: np.ndarray, k: int) -> list:
         if len(docs) == 0:
             return []
         scores = np.zeros(len(docs))
@@ -250,14 +381,25 @@ class QueryEngine:
         order = np.argsort(-scores)[:k]
         return [(int(docs[i]), float(scores[i])) for i in order]
 
+    def and_query_scored(self, terms: list, k: int = 10):
+        return self._score_docs(terms, self.and_query(terms), k)
+
     # ---- batched execution ------------------------------------------------- #
 
     def execute(self, batch: QueryBatch) -> list:
         """Run every query in the batch; results align with batch.queries.
 
-        Queries are processed grouped by sorted term signature so queries
-        sharing terms hit the decoded-block/score caches back to back.
+        On the host path queries are processed grouped by sorted term
+        signature so queries sharing terms hit the decoded-block/score caches
+        back to back.  On the device path (``to_device()``) AND semantics run
+        round-batched through ``and_many`` — one deduped arena decode per
+        round across the whole batch — and OR/scored modes prefetch every
+        needed (term, block) in one arena call before scoring.
         """
+        if batch.mode not in ("and", "or", "and_scored"):
+            raise KeyError(batch.mode)
+        if self.arena is not None:
+            return self._execute_device(batch)
         fn = {"and": self.and_query,
               "or": lambda q: self.or_query(q, batch.k),
               "and_scored": lambda q: self.and_query_scored(q, batch.k)}[batch.mode]
@@ -267,3 +409,14 @@ class QueryEngine:
         for i in order:
             results[i] = fn(batch.queries[i])
         return results
+
+    def _execute_device(self, batch: QueryBatch) -> list:
+        if batch.mode == "and":
+            return self.and_many(batch.queries)
+        if batch.mode == "and_scored":
+            docs = self.and_many(batch.queries)
+            self._prefetch_terms({t for q in batch.queries for t in q})
+            return [self._score_docs(q, d, batch.k)
+                    for q, d in zip(batch.queries, docs)]
+        self._prefetch_terms({t for q in batch.queries for t in q})
+        return [self.or_query(q, batch.k) for q in batch.queries]

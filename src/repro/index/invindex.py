@@ -61,6 +61,20 @@ class InvertedIndex:
             terms[t] = TermPostings(len(docids), blocks)
         return InvertedIndex(codec, terms, len(doclen), np.asarray(doclen))
 
+    def to_device(self, build_fused: bool = True):
+        """Flatten the compressed blocks into device-resident arenas
+        (``repro.index.device.DeviceArena``); cached after the first call.
+        A cached arena built without fused tiles is upgraded in place when
+        ``build_fused=True`` asks for them later."""
+        arena = getattr(self, "_arena", None)
+        if arena is None:
+            from .device import DeviceArena
+            arena = DeviceArena.from_index(self, build_fused=build_fused)
+            self._arena = arena
+        elif build_fused:
+            arena.ensure_fused()
+        return arena
+
     def n_blocks(self, t: int) -> int:
         return len(self.terms[t].blocks)
 

@@ -3,11 +3,14 @@
 kernels: bitpack/bitunpack (fixed-bw shift+mask, the §3.2 inner loop),
 quadmax (OR pseudo-max, §4.4), scan_add (d-gap decode prefix sum),
 unpack_delta (beyond-paper fused unpack+scan), intersect (vectorized
-galloping + block-skip bitmap intersection for the query engine).
+galloping + block-skip bitmap intersection for the query engine),
+decode_fused (work-list block decode fused with the candidate bitmap-AND
+for the device-resident serving path).
 ops.py holds jit wrappers; ref.py the pure-jnp oracles.
 """
 
-from . import bitpack, intersect, ops, quadmax, ref, scan_add, unpack_delta
+from . import (bitpack, decode_fused, intersect, ops, quadmax, ref, scan_add,
+               unpack_delta)
 
-__all__ = ["bitpack", "intersect", "ops", "quadmax", "ref", "scan_add",
-           "unpack_delta"]
+__all__ = ["bitpack", "decode_fused", "intersect", "ops", "quadmax", "ref",
+           "scan_add", "unpack_delta"]

@@ -26,6 +26,18 @@ LANES = 128
 FRAME_INTS = FRAME_ROWS * LANES
 
 
+def auto_interpret(interpret) -> bool:
+    """Resolve an ``interpret`` kwarg: None means "compile only on TPU".
+
+    TPU runs compile the real Mosaic kernels by default; every other backend
+    (this container's CPU, but also GPU, whose Triton lowering has no
+    ``pltpu`` grid-spec/scratch dialect) keeps the interpreter path.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def _mask(bw: int) -> jnp.ndarray:
     return jnp.uint32(0xFFFFFFFF if bw >= 32 else (1 << bw) - 1)
 

@@ -1,0 +1,121 @@
+"""Pallas kernel: FUSED block decode + candidate bitmap-AND (device serving path).
+
+The host query engine intersects one decoded block at a time: decode gaps,
+prefix-sum to docids, probe the candidate list — three passes with the decoded
+block round-tripping through HBM (or host memory) in between.  This kernel is
+the device-resident version of that whole inner loop for the arena's packed
+block tiles (``repro.index.device.DeviceArena``): one grid step per work-list
+entry
+
+  1. DMAs the entry's packed gap tile into VMEM — the tile is selected by a
+     *scalar-prefetched* work-list array, so Pallas's pipelined grid issues the
+     DMA for the skip-selected *next* block while the current one computes
+     (double-buffered prefetch: exactly the async-prefetch item on the
+     ROADMAP),
+  2. unpacks the fixed-width gaps (static shift/mask unroll, the §3.2/§4.4
+     idiom of ``bitpack``),
+  3. prefix-sums them and adds the block's first docid (skip-table entry) to
+     reconstruct docids without writing gaps anywhere, and
+  4. probes each docid against the query's packed candidate bitmap resident in
+     VMEM — the bitmap-AND tile of ``kernels/intersect`` fused directly after
+     decode.
+
+Outputs are (4, 128) docid and hit-mask tiles per entry; the engine compresses
+``docids[hits]`` per block on the way out.  Work-list entries index *blocks*,
+so one call replaces the engine's whole per-term Python loop.
+
+Layout: a block of up to 512 postings is one (rows_per_block, 128) uint32
+tile.  Value ``i`` of the block lives at row ``i // 128``, lane ``i % 128``
+(the linear order of ``ops.pad_to_frames``), packed LSB-first at the arena's
+uniform bit width: lane ``l`` squeezes its 4 values into ``ceil(4*bw/32)``
+words.  The candidate bitmap covers docids [0, n_docs) as (rows, 128) uint32
+words, LSB-first (``intersect.bitmap_build_np`` order).
+
+The per-lane bitmap probe is a VMEM gather; on CPU/interpret (this container)
+it lowers to the reference semantics, on TPU it requires Mosaic dynamic-gather
+support (v4+).  ``interpret=None`` resolves per backend like every other
+kernel wrapper here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitpack import LANES, _mask, auto_interpret
+
+BLOCK_ROWS = 4                       # 512 postings = 4 rows x 128 lanes
+
+
+def rows_per_block(bw: int) -> int:
+    """Packed tile rows for one 512-posting block at bit width ``bw``."""
+    return -(-BLOCK_ROWS * bw // 32)
+
+
+def _fused_kernel(slot_ref, first_ref, n_ref, tile_ref, cand_ref,
+                  ids_ref, hit_ref, *, bw: int, cand_words: int):
+    i = pl.program_id(0)
+    m = _mask(bw)
+    base = first_ref[i]
+    nn = n_ref[i]
+    cand = cand_ref[...].reshape(-1)
+    lane = jnp.arange(LANES, dtype=jnp.int32)
+    for r in range(BLOCK_ROWS):
+        # unpack row r: 128 gaps at static bit offset r*bw within each lane
+        start = r * bw
+        w, off = start // 32, start % 32
+        v = tile_ref[w, :] >> jnp.uint32(off)
+        if off + bw > 32:
+            v = v | (tile_ref[w + 1, :] << jnp.uint32(32 - off))
+        v = v & m
+        # fused d-gap decode: running prefix sum across rows (linear order)
+        c = jnp.cumsum(v, dtype=jnp.uint32)
+        d = c + base
+        base = base + c[-1]
+        # fused AND: probe the candidate bitmap word holding each docid
+        word = cand[jnp.minimum(d >> 5, jnp.uint32(cand_words - 1)).astype(jnp.int32)]
+        hit = (word >> (d & 31)) & jnp.uint32(1)
+        valid = (lane + r * LANES) < nn
+        ids_ref[r, :] = d
+        hit_ref[r, :] = jnp.where(valid, hit, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def fused_decode_and(tiles: jnp.ndarray, slots: jnp.ndarray,
+                     firsts: jnp.ndarray, ns: jnp.ndarray,
+                     cand_rows: jnp.ndarray, bw: int,
+                     interpret=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode + intersect a work-list of packed block tiles in one call.
+
+    tiles:     (S * rows_per_block(bw), 128) uint32 — the packed gap arena.
+    slots:     (W,) int32 — arena tile index per work-list entry (the engine's
+               skip-selected blocks; drives the prefetched DMA index map).
+    firsts:    (W,) uint32 — first docid per entry (skip-table value).
+    ns:        (W,) int32 — posting count per entry (<= 512).
+    cand_rows: (R, 128) uint32 — candidate bitmap over [0, R*4096).
+
+    Returns (docids, hits), each (W * 4, 128) uint32; entry j owns rows
+    [4j, 4j+4) and its intersection is ``docids[hits == 1]`` in linear order.
+    """
+    w = slots.shape[0]
+    rpb = rows_per_block(bw)
+    crows = cand_rows.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((rpb, LANES), lambda i, s, f, n: (s[i], 0)),
+                  pl.BlockSpec((crows, LANES), lambda i, s, f, n: (0, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s, f, n: (i, 0)),
+                   pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s, f, n: (i, 0))],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, bw=bw, cand_words=crows * LANES),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((w * BLOCK_ROWS, LANES), jnp.uint32),
+                   jax.ShapeDtypeStruct((w * BLOCK_ROWS, LANES), jnp.uint32)],
+        interpret=auto_interpret(interpret),
+    )(slots, firsts, ns, tiles, cand_rows)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .bitpack import LANES
+from .bitpack import LANES, auto_interpret
 
 # bitmap intersection pays off when the shorter list covers at least this
 # fraction of the candidate docid span (one uint32 word per 32 docids)
@@ -112,9 +112,14 @@ def _and_kernel(a_ref, b_ref, o_ref, *, rows: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "rows_per_block"))
-def bitmap_and_tiles(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = True,
+def bitmap_and_tiles(a: jnp.ndarray, b: jnp.ndarray, interpret=None,
                      rows_per_block: int = 8) -> jnp.ndarray:
-    """(R, 128) uint32 bitmap tiles -> elementwise AND, tiled through VMEM."""
+    """(R, 128) uint32 bitmap tiles -> elementwise AND, tiled through VMEM.
+
+    ``interpret=None`` resolves per backend (compiled Mosaic on TPU,
+    interpreter elsewhere) so TPU runs get the real kernel by default.
+    """
+    interpret = auto_interpret(interpret)
     rows = a.shape[0]
     rpb = min(rows_per_block, rows)
     while rows % rpb:

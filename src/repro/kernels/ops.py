@@ -15,13 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitpack, quadmax, scan_add, unpack_delta
-from .bitpack import FRAME_INTS, FRAME_ROWS, LANES
-
-
-def _auto_interpret(interpret) -> bool:
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+from .bitpack import FRAME_INTS, FRAME_ROWS, LANES, auto_interpret as _auto_interpret
 
 
 def pad_to_frames(x: jnp.ndarray) -> jnp.ndarray:

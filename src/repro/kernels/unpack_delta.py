@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .bitpack import FRAME_ROWS, LANES, _mask
+from .bitpack import FRAME_ROWS, LANES, _mask, auto_interpret
 
 
 def _unpack_delta_kernel(p_ref, o_ref, carry_ref, *, bw: int, frames: int):
@@ -43,9 +43,14 @@ def _unpack_delta_kernel(p_ref, o_ref, carry_ref, *, bw: int, frames: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bw", "interpret", "frames_per_block"))
-def unpack_delta_frames(packed: jnp.ndarray, bw: int, interpret: bool = True,
+def unpack_delta_frames(packed: jnp.ndarray, bw: int, interpret=None,
                         frames_per_block: int = 4) -> jnp.ndarray:
-    """(F*bw, 128) packed gaps -> (F*32, 128) docids (prefix-summed)."""
+    """(F*bw, 128) packed gaps -> (F*32, 128) docids (prefix-summed).
+
+    ``interpret=None`` resolves per backend (compiled Mosaic on TPU,
+    interpreter elsewhere).
+    """
+    interpret = auto_interpret(interpret)
     f = packed.shape[0] // bw
     fpb = min(frames_per_block, f)
     while f % fpb:

@@ -1,0 +1,189 @@
+"""Device/host parity for the posting arenas: batched arena decode and the
+``device=True`` engine must be bit-identical to the numpy engine across every
+registered group codec, including block-boundary (df == 512/513/1024) and
+empty-intersection edge cases; the fused decode+AND kernel must match the
+host intersection exactly; and the work-list discipline (<= 1 decode per hot
+(term, block) per batch) must hold."""
+
+import numpy as np
+import pytest
+
+from repro.core import codec
+from repro.index.device import KIND_HOST, SUPPORTED, DeviceArena
+from repro.index.engine import QueryBatch, QueryEngine
+from repro.index.invindex import InvertedIndex
+
+RNG = np.random.default_rng(1234)
+N_DOCS = 1500
+
+# df values straddle the short-list cutoff (64) and the 512-posting block
+# boundary; the last two are docid-disjoint so AND over them is empty
+DFS = [12, 63, 64, 200, 512, 513, 1024, 300, 280]
+
+
+def _corpus():
+    doclen = RNG.integers(40, 300, N_DOCS).astype(np.int64)
+    postings = {}
+    for t, df in enumerate(DFS[:-2]):
+        ids = np.sort(RNG.choice(N_DOCS, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, RNG.geometric(0.4, df).astype(np.uint32))
+    lo = np.sort(RNG.choice(N_DOCS // 2, DFS[-2], replace=False)).astype(np.uint32)
+    hi = (np.sort(RNG.choice(N_DOCS // 2, DFS[-1], replace=False))
+          + N_DOCS // 2).astype(np.uint32)
+    postings[len(DFS) - 2] = (lo, RNG.geometric(0.4, DFS[-2]).astype(np.uint32))
+    postings[len(DFS) - 1] = (hi, RNG.geometric(0.4, DFS[-1]).astype(np.uint32))
+    return doclen, postings
+
+
+DOCLEN, POSTINGS = _corpus()
+NT = len(DFS)
+QUERIES = ([RNG.choice(NT, size=int(RNG.integers(2, 4)), replace=False).tolist()
+            for _ in range(12)]
+           + [[NT - 2, NT - 1],          # disjoint -> empty intersection
+              [4], [6],                  # single term, block-boundary terms
+              [0, 999]])                 # unknown term ignored
+
+
+def _engines(name, fused=False):
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
+    return QueryEngine(idx), QueryEngine(idx, device=True, fused=fused)
+
+
+@pytest.mark.parametrize("name", codec.names(group_only=True))
+def test_device_engine_matches_host_engine(name):
+    host, dev = _engines(name)
+    want = host.execute(QueryBatch(QUERIES, mode="and"))
+    got = dev.execute(QueryBatch(QUERIES, mode="and"))
+    for q, a, b in zip(QUERIES, want, got):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name}/and/{q}")
+        assert b.dtype == np.uint32
+    assert (host.execute(QueryBatch(QUERIES[:5], mode="or", k=7))
+            == dev.execute(QueryBatch(QUERIES[:5], mode="or", k=7))), name
+    assert (host.execute(QueryBatch(QUERIES[:5], mode="and_scored", k=7))
+            == dev.execute(QueryBatch(QUERIES[:5], mode="and_scored", k=7))), name
+
+
+@pytest.mark.parametrize("name", ["group_simple", "bp128", "g_packed_binary",
+                                  "group_pfd"])
+def test_fused_decode_and_matches_host_engine(name):
+    host, dev = _engines(name, fused=True)
+    want = host.execute(QueryBatch(QUERIES, mode="and"))
+    got = dev.execute(QueryBatch(QUERIES, mode="and"))
+    for q, a, b in zip(QUERIES, want, got):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name}/fused/{q}")
+    assert dev.arena.stats["fused_calls"] > 0   # the kernel actually ran
+
+
+@pytest.mark.parametrize("name", ["group_simple", "bp128", "stream_vbyte",
+                                  "group_scheme_8-IU"])
+def test_arena_block_decode_matches_numpy_oracle(name):
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
+    arena = DeviceArena.from_index(idx, build_fused=False)
+    entries = [(t, bi, f) for t in idx.terms
+               for bi in range(idx.n_blocks(t)) for f in (0, 1)]
+    got = arena.decode_blocks(entries)
+    for (t, bi, f), a in zip(entries, got):
+        want = idx.decode_block_ids(t, bi) if f == 0 else idx.decode_block_tfs(t, bi)
+        np.testing.assert_array_equal(a, want, err_msg=f"{name}/{t}/{bi}/{f}")
+    if name in SUPPORTED:
+        assert arena.stats["blocks_device"] > 0
+        # short lists (< 64 postings) still fall back to stream_vbyte on host
+        assert any(k == KIND_HOST for k, _ in arena._loc.values())
+
+
+def test_device_worklist_decodes_each_hot_block_once():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    eng = QueryEngine(idx, cache_blocks=1 << 20, device=True)
+    eng.execute(QueryBatch(QUERIES, mode="and"))
+    # cold eviction-free cache: every decode is a distinct hot (term, block),
+    # and the hot set is counted independently of the decode counters
+    hot = {k for k in eng.cache.keys() if k[1] >= 0}
+    decodes = (eng.dev_stats["worklist_decodes"]
+               + eng.dev_stats["fallback_decodes"])
+    assert decodes == len(hot)
+    assert eng.dev_stats["fallback_decodes"] == 0
+    assert eng.dev_stats["worklist_refs"] >= eng.dev_stats["worklist_decodes"]
+    # a second pass over the same batch is fully cache-served
+    before = eng.dev_stats["worklist_decodes"]
+    r1 = eng.execute(QueryBatch(QUERIES, mode="and"))
+    assert eng.dev_stats["worklist_decodes"] == before
+    r0 = QueryEngine(idx).execute(QueryBatch(QUERIES, mode="and"))
+    for a, b in zip(r0, r1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_device_engine_eviction_pressure_stays_exact():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="bp128")
+    host = QueryEngine(idx)
+    tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1, device=True)
+    want = host.execute(QueryBatch(QUERIES, mode="and"))
+    got = tiny.execute(QueryBatch(QUERIES, mode="and"))
+    assert tiny.cache.evictions > 0
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_zero_posting_term_and_empty_results_on_device():
+    postings = dict(POSTINGS)
+    postings[99] = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))
+    idx = InvertedIndex.build(DOCLEN, postings, codec="group_simple")
+    eng = QueryEngine(idx, device=True, fused=True)
+    res = eng.execute(QueryBatch([[99], [99, 0], [NT - 2, NT - 1]], mode="and"))
+    for r in res:
+        assert len(r) == 0 and r.dtype == np.uint32 and r.flags.writeable
+    assert eng.or_query([99]) == []
+
+
+def test_term_concat_empty_is_frozen_and_consistent():
+    postings = dict(POSTINGS)
+    postings[99] = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))
+    idx = InvertedIndex.build(DOCLEN, postings, codec="group_simple")
+    eng = QueryEngine(idx)
+    v = eng.term_ids(99)
+    assert len(v) == 0 and v.dtype == np.uint32
+    # same contract as every other accessor: cache-backed arrays are frozen
+    assert not v.flags.writeable
+    assert not eng.term_tfs(99).flags.writeable
+    np.testing.assert_array_equal(v, eng.term_ids(99))
+    # but and_query results stay caller-owned
+    assert eng.and_query([99]).flags.writeable
+
+
+def test_invalid_mode_raises_on_both_paths():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    for eng in (QueryEngine(idx), QueryEngine(idx, device=True)):
+        with pytest.raises(KeyError):
+            eng.execute(QueryBatch([[0, 1]], mode="And"))
+
+
+def test_fused_arena_buckets_by_block_bit_width():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    arena = idx.to_device()
+    # the corpus mixes dense (df=1024) and sparse (df=64) terms, so blocks
+    # must land in more than one width bucket and every block must be covered
+    assert len(arena._pk) > 1
+    assert set(arena._pk) <= set(arena.FUSED_BW_BUCKETS)
+    covered = set(arena._pk_slot)
+    assert covered == {(t, bi) for t in idx.terms
+                       for bi in range(idx.n_blocks(t))}
+
+
+def test_to_device_upgrades_unfused_arena_in_place():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    a1 = idx.to_device(build_fused=False)
+    assert a1._pk is None
+    a2 = idx.to_device(build_fused=True)     # cached arena gains fused tiles
+    assert a2 is a1 and a1._pk is not None
+    eng = QueryEngine(idx, device=True, fused=True)
+    eng.execute(QueryBatch(QUERIES[:4], mode="and"))
+    assert eng.arena.stats["fused_calls"] > 0
+
+
+def test_to_device_is_cached_and_idempotent():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    a1 = idx.to_device()
+    a2 = idx.to_device()
+    assert a1 is a2
+    eng = QueryEngine(idx).to_device()
+    assert eng.arena is a1
+    assert eng.to_device(fused=True) is eng and eng._fused
