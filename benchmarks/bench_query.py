@@ -19,8 +19,10 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 
 import numpy as np
+import jax
 
 from repro.data import synth
 from repro.index.invindex import InvertedIndex
@@ -33,6 +35,17 @@ CODECS = ["group_simple", "group_scheme_8-IU", "group_pfd", "bp128",
           "afor", "gvb"]
 
 BATCH_SIZES = (1, 16, 256)
+
+
+def git_sha() -> str:
+    """Current commit, so the qps trajectory is comparable across PRs."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def make_queries(postings: dict, n_queries: int, seed: int = 3) -> list:
@@ -71,7 +84,10 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
     doclen, postings = synth.make_corpus(dataset)
     queries = make_queries(postings, n_queries)
     idx = InvertedIndex.build(doclen, postings, codec=codec)
+    # provenance stamp: codec, jax backend, and commit make the trajectory
+    # comparable across PRs and across CI/TPU runners
     report = {"dataset": dataset, "codec": codec, "n_queries": n_queries,
+              "backend": jax.default_backend(), "git_sha": git_sha(),
               "host_qps": {}, "device_qps": {}}
 
     def seed_loop():
@@ -92,9 +108,11 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
         def run_engine(device: bool):
             # fresh engine per repeat: cold cache, so the measurement includes
             # every decode the batch actually pays for
-            eng = QueryEngine(idx, device=device)
+            eng = QueryEngine(idx)
+            if device:
+                eng.to_device()
             for b in batches:
-                eng.execute(QueryBatch(b, mode="and"))
+                eng.execute(eng.plan(QueryBatch(b, mode="and")))
 
         t = timeit(lambda: run_engine(False), repeats=3, warmup=1)
         emit(f"query/{dataset}/{codec}/and_batched_{bs}", t * 1e6,
@@ -109,8 +127,8 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
     # cache on a cold engine, the unique hot (term, block) set is exactly the
     # decoded-block keys left in the cache, counted independently of the
     # decode counters — a dedup regression shows up as a ratio > 1
-    eng = QueryEngine(idx, cache_blocks=1 << 20, device=True)
-    eng.execute(QueryBatch(queries, mode="and"))
+    eng = QueryEngine(idx, cache_blocks=1 << 20).to_device()
+    eng.execute(eng.plan(QueryBatch(queries, mode="and")))
     refs = eng.dev_stats["worklist_refs"]
     decodes = (eng.dev_stats["worklist_decodes"]
                + eng.dev_stats["fallback_decodes"])

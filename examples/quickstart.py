@@ -4,9 +4,11 @@
   2. compare scalar vs vectorized decode (the paper's central axis),
   3. run the TPU-layout Pallas kernels (interpret mode on CPU),
   4. build + query a compressed inverted index,
-  5. serve a query batch through the fused decode-and-intersect engine,
+  5. serve a query batch through the fused decode-and-intersect engine
+     (plan, then execute: engine.execute(engine.plan(batch))),
   6. move the index into device-resident arenas (engine.to_device()) and
-     serve the same batch with round-batched lane-parallel block decodes.
+     serve the same batch with round-batched lane-parallel block decodes —
+     arena coverage comes from each codec's declared ArenaLayout capability.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -70,8 +72,9 @@ def main() -> None:
     queries = [rng.choice(terms[:100], size=3, replace=False).tolist()
                for _ in range(256)]
     engine = QueryEngine(idx, cache_blocks=4096)
+    plan = engine.plan(QueryBatch(queries, mode="and"))
     t0 = time.perf_counter()
-    results = engine.execute(QueryBatch(queries, mode="and"))
+    results = engine.execute(plan)
     dt = time.perf_counter() - t0
     st = engine.cache.stats()
     print(f"batched engine: {len(queries)} AND queries in {dt*1e3:.1f} ms "
@@ -82,11 +85,12 @@ def main() -> None:
     # each AND round issues ONE lane-parallel decode for the whole batch's
     # deduped (term, block) work-list instead of O(blocks) Python iterations
     dev = QueryEngine(idx, cache_blocks=4096).to_device()
-    dev.execute(QueryBatch(queries, mode="and"))        # warm up the jits
+    dev_plan = dev.plan(QueryBatch(queries, mode="and"))
+    dev.execute(dev_plan)                               # warm up the jits
     dev = QueryEngine(idx, cache_blocks=4096).to_device()
     calls0 = dev.arena.stats["device_calls"]   # arena (and stats) are shared
     t0 = time.perf_counter()
-    dev_results = dev.execute(QueryBatch(queries, mode="and"))
+    dev_results = dev.execute(dev_plan)
     dt = time.perf_counter() - t0
     assert all(np.array_equal(a, b) for a, b in zip(results, dev_results))
     ds = dev.dev_stats

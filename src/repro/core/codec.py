@@ -1,109 +1,333 @@
-"""Uniform codec registry (Table VI of the paper).
+"""Codec protocol v2: capability-declaring codecs (Table VI of the paper).
 
-Each entry exposes:
+The paper's claim is that the Group layout is *general* — every compression
+algorithm instantiates the same group-unpack skeleton — so the registry is the
+single place where a codec says what it can do and every consumer (index,
+engine, device arenas, benchmarks, tests, CI lint) discovers it from there
+instead of special-casing codec names.
+
+A :class:`Codec` always provides the host surface:
+
   encode(np.uint32[N]) -> Encoded
-  decode(Encoded) -> np.uint32[N]          (numpy oracle)
-and, for the Group family, JAX decoders:
-  jax_args(Encoded) -> kwargs
-  decode_jax_scalar(**kwargs), decode_jax_vec(**kwargs)
-where "scalar" mirrors the paper's sequential non-SIMD routine and "vec" the
-SIMD-vectorized one.
+  decode_np(Encoded)   -> np.uint32[N]          (numpy oracle)
+
+and *declares* optional capabilities:
+
+  * :class:`JaxDecode` — device decode entry points: ``args(Encoded)`` packs
+    the jit kwargs, ``scalar(**kw)`` mirrors the paper's sequential routine,
+    ``vec(**kw)`` the SIMD-vectorized one (Table VII rows).
+  * :class:`ArenaLayout` — the fixed-shape device-arena contract consumed by
+    ``repro.index.device``: padded control/data/output widths for one posting
+    block plus a ``decode_block(ctrl, data, ctrl_len, n_valid)`` entry that
+    decodes under ``vmap``/``jit`` with static shapes.  Any codec declaring
+    this gets the lane-parallel batched work-list decode for free — the arena
+    builder contains no per-codec branches.
+
+The v1 ``CodecSpec`` attribute surface (``decode``, ``jax_args``,
+``decode_jax_scalar``, ``decode_jax_vec``) is kept as read-only aliases so
+existing callers migrate at their own pace; ``CodecSpec`` itself now names
+this class.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import functools
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from . import bp128, group_afor, group_pfd, group_scheme, group_simple, scalar
+from . import bp_tpu, group_vse, stream_vbyte
 from .encoded import Encoded
+
+# One posting block of the inverted index is at most this many integers; all
+# declared arena widths are padded maxima for a block of this size.
+ARENA_BLOCK = 512
+
+
+# --------------------------------------------------------------------------- #
+# capability declarations
+# --------------------------------------------------------------------------- #
 
 
 @dataclasses.dataclass(frozen=True)
-class CodecSpec:
+class JaxDecode:
+    """Device decode capability: jit argument packing + scalar/vec entries."""
+
+    args: Callable[[Encoded], dict]
+    scalar: Callable[..., Any]
+    vec: Callable[..., Any]
+
+
+def _block_ctrl_default(enc: Encoded) -> np.ndarray:
+    return np.asarray(enc.control).reshape(-1)
+
+
+def _block_data_default(enc: Encoded) -> np.ndarray:
+    return np.asarray(enc.data, np.uint32).reshape(-1)
+
+
+def _supports_default(enc: Encoded) -> bool:
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Fixed-shape device-arena contract for one posting block.
+
+    The device arena concatenates every block's control words into one
+    ``ctrl_dtype`` device array and every block's data words into one uint32
+    device array, then decodes a work-list lane-parallel: each lane gathers a
+    padded ``(ctrl_width,)`` / ``(data_width,)`` slice (``dynamic_slice``
+    under ``vmap``) and calls ``decode_block``.
+
+    ctrl_width / data_width: padded per-block maxima (flat words) — slack past
+        a block's own words may contain the *next* block's words, so
+        ``decode_block`` must mask everything past ``ctrl_len`` / ``n_valid``.
+    out_width: static length of ``decode_block``'s result (zero-padded past
+        ``n_valid``).
+    decode_block(ctrl, data, ctrl_len, n_valid) -> uint32[out_width]: jit/vmap
+        traceable, static shapes, dynamic lengths.
+    block_ctrl / block_data: extract one encoded block's control/data words
+        (host side, at arena build time).
+    supports(enc): per-block eligibility — a block whose encoding does not
+        match this fixed layout (e.g. a BP frame size other than the one the
+        layout was declared for) falls back to the host oracle instead of
+        decoding silently wrong.
+    max_n: largest block the widths are sized for (the index block size).
+    """
+
+    ctrl_width: int
+    data_width: int
+    out_width: int
+    decode_block: Callable[..., Any]
+    block_ctrl: Callable[[Encoded], np.ndarray] = _block_ctrl_default
+    block_data: Callable[[Encoded], np.ndarray] = _block_data_default
+    supports: Callable[[Encoded], bool] = _supports_default
+    ctrl_dtype: Any = np.int32
+    max_n: int = ARENA_BLOCK
+
+
+# --------------------------------------------------------------------------- #
+# the Codec protocol
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """A registered codec: required host surface + declared capabilities."""
+
     name: str
     category: str                  # bit | byte | word | frame
     encode: Callable[[np.ndarray], Encoded]
-    decode: Callable[[Encoded], np.ndarray]
-    jax_args: Optional[Callable] = None
-    decode_jax_scalar: Optional[Callable] = None
-    decode_jax_vec: Optional[Callable] = None
+    decode_np: Callable[[Encoded], np.ndarray]
     max_bits: int = 32             # values above 2**max_bits-1 unsupported
     is_group: bool = False         # uses the paper's Group approach
+    jax: Optional[JaxDecode] = None
+    arena: Optional[ArenaLayout] = None
+
+    # ---- v1 CodecSpec aliases (deprecated; see the migration note in
+    # src/repro/index/__init__.py) ------------------------------------------ #
+
+    @property
+    def decode(self) -> Callable[[Encoded], np.ndarray]:
+        return self.decode_np
+
+    @property
+    def jax_args(self) -> Optional[Callable[[Encoded], dict]]:
+        return self.jax.args if self.jax else None
+
+    @property
+    def decode_jax_scalar(self) -> Optional[Callable[..., Any]]:
+        return self.jax.scalar if self.jax else None
+
+    @property
+    def decode_jax_vec(self) -> Optional[Callable[..., Any]]:
+        return self.jax.vec if self.jax else None
 
 
-REGISTRY: dict[str, CodecSpec] = {}
+CodecSpec = Codec  # v1 name
 
 
-def _reg(spec: CodecSpec) -> None:
+REGISTRY: dict[str, Codec] = {}
+
+
+def register(spec: Codec) -> Codec:
     REGISTRY[spec.name] = spec
+    return spec
 
 
-# ---- scalar baselines ------------------------------------------------------ #
-_reg(CodecSpec("varbyte", "byte", scalar.vb_encode, scalar.vb_decode))
-from . import stream_vbyte  # noqa: E402
-_reg(CodecSpec("stream_vbyte", "byte", stream_vbyte.encode, stream_vbyte.decode_np,
-               stream_vbyte.jax_args, stream_vbyte.decode_jax_scalar,
-               stream_vbyte.decode_jax_vec))
-_reg(CodecSpec("gvb", "byte", scalar.gvb_encode, scalar.gvb_decode))
-_reg(CodecSpec("g8iu", "byte", scalar.g8iu_encode, scalar.g8iu_decode))
-_reg(CodecSpec("g8cu", "byte", scalar.g8cu_encode, scalar.g8cu_decode))
-_reg(CodecSpec("simple9", "word", scalar.simple9_encode, scalar.simple9_decode, max_bits=28))
-_reg(CodecSpec("simple16", "word", scalar.simple16_encode, scalar.simple16_decode, max_bits=28))
-_reg(CodecSpec("rice", "bit", scalar.rice_encode, scalar.rice_decode))
-_reg(CodecSpec("gamma", "bit", scalar.gamma_encode, scalar.gamma_decode, max_bits=31))
-_reg(CodecSpec("pfordelta", "frame", scalar.pfd_encode, scalar.pfd_decode))
-_reg(CodecSpec("afor", "frame", scalar.afor_encode, scalar.afor_decode))
-_reg(CodecSpec("packed_binary", "frame", scalar.packedbinary_encode, scalar.packedbinary_decode))
-
-# ---- Group family (this paper) --------------------------------------------- #
-_reg(CodecSpec("group_simple", "word", group_simple.encode, group_simple.decode_np,
-               group_simple.jax_args, group_simple.decode_jax_scalar,
-               group_simple.decode_jax_vec, is_group=True))
-
-for v in group_scheme.VARIANTS:
-    _reg(CodecSpec(
-        f"group_scheme_{v}", "bit" if int(v.split("-")[0]) < 8 else "byte",
-        functools.partial(group_scheme.encode, variant=v), group_scheme.decode_np,
-        group_scheme.jax_args, group_scheme.decode_jax_scalar,
-        group_scheme.decode_jax_vec, is_group=True))
-
-_reg(CodecSpec("group_afor", "frame", group_afor.encode, group_afor.decode_np,
-               group_afor.jax_args, group_afor.decode_jax_scalar,
-               group_afor.decode_jax_vec, is_group=True))
-
-from . import group_vse  # noqa: E402
-_reg(CodecSpec("group_vse", "frame", group_vse.encode, group_vse.decode_np,
-               group_vse.jax_args, group_vse.decode_jax_scalar,
-               group_vse.decode_jax_vec, is_group=True))
-_reg(CodecSpec("group_pfd", "frame", group_pfd.encode, group_pfd.decode_np,
-               group_pfd.jax_args, group_pfd.decode_jax_scalar,
-               group_pfd.decode_jax_vec, is_group=True))
-_reg(CodecSpec("group_optpfd", "frame", functools.partial(group_pfd.encode, opt=True),
-               group_pfd.decode_np, group_pfd.jax_args, group_pfd.decode_jax_scalar,
-               group_pfd.decode_jax_vec, is_group=True))
-_reg(CodecSpec("bp128", "frame", bp128.encode, bp128.decode_np,
-               bp128.jax_args, bp128.decode_jax_scalar, bp128.decode_jax_vec, is_group=True))
-
-from . import bp_tpu  # noqa: E402  (imports kernels; kept after core codecs)
-_reg(CodecSpec("bp_tpu", "frame", bp_tpu.encode, bp_tpu.decode_np, is_group=True))
-_reg(CodecSpec("g_packed_binary", "frame", bp128.encode_packed_binary, bp128.decode_np,
-               bp128.jax_args, bp128.decode_jax_scalar, bp128.decode_jax_vec, is_group=True))
-
-
-def get(name: str) -> CodecSpec:
-    return REGISTRY[name]
+def get(name: str) -> Codec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        known = names()
+        near = difflib.get_close_matches(str(name), known, n=1)
+        hint = f" (did you mean {near[0]!r}?)" if near else ""
+        raise KeyError(
+            f"unknown codec {name!r}{hint}; registered codecs: {', '.join(known)}"
+        ) from None
 
 
 def names(category: str | None = None, group_only: bool = False) -> list[str]:
-    out = []
-    for k, s in REGISTRY.items():
-        if category and s.category != category:
-            continue
-        if group_only and not s.is_group:
-            continue
-        out.append(k)
-    return out
+    """Registered codec names, deterministically sorted."""
+    return sorted(
+        k for k, s in REGISTRY.items()
+        if (category is None or s.category == category)
+        and (not group_only or s.is_group)
+    )
+
+
+# --------------------------------------------------------------------------- #
+# arena adapters: thin shims binding each codec module's fixed-shape decoder
+# to the uniform (ctrl, data, ctrl_len, n_valid) contract.  Defined at module
+# level (or as one-time partials below) so their identity is stable — the
+# arena jits with decode_block as a static argument.
+# --------------------------------------------------------------------------- #
+
+_GS_PMAX = ARENA_BLOCK // 4            # max Group-Simple vectors per block
+
+
+def _gs_block_ctrl(enc: Encoded) -> np.ndarray:
+    return np.asarray(enc.meta["sels"], np.int32)
+
+
+def _gs_decode_block(ctrl, data, ctrl_len, n_valid):
+    return group_simple.decode_arena_block(ctrl, data.reshape(-1, 4),
+                                           ctrl_len, n_valid)
+
+
+_GS_ARENA = ArenaLayout(
+    ctrl_width=_GS_PMAX, data_width=4 * _GS_PMAX, out_width=ARENA_BLOCK,
+    decode_block=_gs_decode_block, block_ctrl=_gs_block_ctrl)
+
+_BP_WMAX = ARENA_BLOCK // 4            # max data words per component per block
+
+
+def _bp_block_ctrl(enc: Encoded) -> np.ndarray:
+    return np.asarray(enc.control, np.int32)
+
+
+def _bp_decode_block(ctrl, data, ctrl_len, n_valid, *, frame_quads):
+    return bp128.decode_arena_block(ctrl, data.reshape(-1, 4), n_valid,
+                                    frame_quads)
+
+
+def _bp_supports(enc: Encoded, *, frame_quads) -> bool:
+    # the layout's frame size is baked into its fixed shapes; a block encoded
+    # at any other frame size must take the host oracle (replaces the old
+    # arena builder's "mixed BP layouts" assert)
+    return enc.meta.get("frame_quads") == frame_quads
+
+
+def _bp_arena(frame_quads: int) -> ArenaLayout:
+    return ArenaLayout(
+        ctrl_width=-(-_BP_WMAX // frame_quads),
+        data_width=4 * (_BP_WMAX + 2),
+        out_width=ARENA_BLOCK,
+        decode_block=functools.partial(_bp_decode_block,
+                                       frame_quads=frame_quads),
+        block_ctrl=_bp_block_ctrl,
+        supports=functools.partial(_bp_supports, frame_quads=frame_quads))
+
+
+def _svb_block_data(enc: Encoded) -> np.ndarray:
+    # payload bytes widened to one uint32 word each (TPU has no 8-bit lanes)
+    return np.asarray(enc.data, np.uint32)
+
+
+_SVB_ARENA = ArenaLayout(
+    ctrl_width=ARENA_BLOCK // 4,               # one control byte per quadruple
+    data_width=4 * ARENA_BLOCK + 4,            # worst-case payload + gather slack
+    out_width=ARENA_BLOCK,
+    decode_block=stream_vbyte.decode_arena_block,
+    block_ctrl=_block_ctrl_default,            # control bytes, one per word
+    block_data=_svb_block_data,
+    ctrl_dtype=np.uint32)
+
+
+def _gsch_arena(variant: str) -> ArenaLayout:
+    return ArenaLayout(
+        ctrl_width=group_scheme.arena_ctrl_width(variant),
+        data_width=4 * (ARENA_BLOCK // 4 + 2),
+        out_width=ARENA_BLOCK,
+        decode_block=functools.partial(group_scheme.decode_arena_block,
+                                       variant=variant),
+        block_ctrl=group_scheme.arena_block_ctrl,
+        ctrl_dtype=np.uint32)
+
+
+# --------------------------------------------------------------------------- #
+# registry: every codec module registered through the protocol
+# --------------------------------------------------------------------------- #
+
+# ---- scalar baselines ------------------------------------------------------ #
+register(Codec("varbyte", "byte", scalar.vb_encode, scalar.vb_decode))
+register(Codec("stream_vbyte", "byte", stream_vbyte.encode,
+               stream_vbyte.decode_np,
+               jax=JaxDecode(stream_vbyte.jax_args,
+                             stream_vbyte.decode_jax_scalar,
+                             stream_vbyte.decode_jax_vec),
+               arena=_SVB_ARENA))
+register(Codec("gvb", "byte", scalar.gvb_encode, scalar.gvb_decode))
+register(Codec("g8iu", "byte", scalar.g8iu_encode, scalar.g8iu_decode))
+register(Codec("g8cu", "byte", scalar.g8cu_encode, scalar.g8cu_decode))
+register(Codec("simple9", "word", scalar.simple9_encode, scalar.simple9_decode,
+               max_bits=28))
+register(Codec("simple16", "word", scalar.simple16_encode,
+               scalar.simple16_decode, max_bits=28))
+register(Codec("rice", "bit", scalar.rice_encode, scalar.rice_decode))
+register(Codec("gamma", "bit", scalar.gamma_encode, scalar.gamma_decode,
+               max_bits=31))
+register(Codec("pfordelta", "frame", scalar.pfd_encode, scalar.pfd_decode))
+register(Codec("afor", "frame", scalar.afor_encode, scalar.afor_decode))
+register(Codec("packed_binary", "frame", scalar.packedbinary_encode,
+               scalar.packedbinary_decode))
+
+# ---- Group family (this paper) --------------------------------------------- #
+register(Codec("group_simple", "word", group_simple.encode,
+               group_simple.decode_np, is_group=True,
+               jax=JaxDecode(group_simple.jax_args,
+                             group_simple.decode_jax_scalar,
+                             group_simple.decode_jax_vec),
+               arena=_GS_ARENA))
+
+for _v in group_scheme.VARIANTS:
+    register(Codec(
+        f"group_scheme_{_v}", "bit" if int(_v.split("-")[0]) < 8 else "byte",
+        functools.partial(group_scheme.encode, variant=_v),
+        group_scheme.decode_np, is_group=True,
+        jax=JaxDecode(group_scheme.jax_args, group_scheme.decode_jax_scalar,
+                      group_scheme.decode_jax_vec),
+        arena=_gsch_arena(_v)))
+
+register(Codec("group_afor", "frame", group_afor.encode, group_afor.decode_np,
+               is_group=True,
+               jax=JaxDecode(group_afor.jax_args, group_afor.decode_jax_scalar,
+                             group_afor.decode_jax_vec)))
+register(Codec("group_vse", "frame", group_vse.encode, group_vse.decode_np,
+               is_group=True,
+               jax=JaxDecode(group_vse.jax_args, group_vse.decode_jax_scalar,
+                             group_vse.decode_jax_vec)))
+register(Codec("group_pfd", "frame", group_pfd.encode, group_pfd.decode_np,
+               is_group=True,
+               jax=JaxDecode(group_pfd.jax_args, group_pfd.decode_jax_scalar,
+                             group_pfd.decode_jax_vec)))
+register(Codec("group_optpfd", "frame",
+               functools.partial(group_pfd.encode, opt=True),
+               group_pfd.decode_np, is_group=True,
+               jax=JaxDecode(group_pfd.jax_args, group_pfd.decode_jax_scalar,
+                             group_pfd.decode_jax_vec)))
+register(Codec("bp128", "frame", bp128.encode, bp128.decode_np, is_group=True,
+               jax=JaxDecode(bp128.jax_args, bp128.decode_jax_scalar,
+                             bp128.decode_jax_vec),
+               arena=_bp_arena(32)))
+register(Codec("bp_tpu", "frame", bp_tpu.encode, bp_tpu.decode_np,
+               is_group=True))
+register(Codec("g_packed_binary", "frame", bp128.encode_packed_binary,
+               bp128.decode_np, is_group=True,
+               jax=JaxDecode(bp128.jax_args, bp128.decode_jax_scalar,
+                             bp128.decode_jax_vec),
+               arena=_bp_arena(128)))

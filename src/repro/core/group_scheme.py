@@ -265,6 +265,110 @@ def decode_jax_vec(control, data, n: int, q: int, variant: str, n_control_bytes:
     return val.reshape(-1)[:n]
 
 
+# --------------------------------------------------------------------------- #
+# fixed-shape arena decode (device work-lists)
+# --------------------------------------------------------------------------- #
+
+
+def arena_ctrl_width(variant: str, qmax: int = 128) -> int:
+    """Padded control words (B/CU) or control bytes (IU) for a ``qmax``-quad
+    block, including gather slack — the ``ctrl_width`` of this variant's
+    declared :class:`repro.core.codec.ArenaLayout`."""
+    cg, ld = _split(variant)
+    if ld == "B":
+        gsz, _, gb = B_LAYOUT[cg]
+        return -(-(-(-qmax // gsz) * gb) // 32) + 2
+    if ld == "CU":
+        return -(-qmax * (-(-32 // cg)) // 32) + 1
+    return qmax                     # IU: one entry per byte, <= 1 byte per quad
+
+
+def arena_block_ctrl(enc: Encoded) -> np.ndarray:
+    """One encoded block's control stream in arena form: packed uint32 words
+    for B/CU, one byte per uint32 entry for IU (byte-addressed LUT decode)."""
+    _, ld = _split(enc.meta["variant"])
+    if ld == "IU":
+        by = enc.control.view(np.uint8)[: enc.meta["n_control_bytes"]]
+        return by.astype(np.uint32)
+    return np.asarray(enc.control, np.uint32)
+
+
+def _arena_nunits(control: jnp.ndarray, ctrl_len: jnp.ndarray, qmax: int,
+                  cg: int, ld: str) -> jnp.ndarray:
+    """Per-quad unit counts from a padded control slice.  Slack past the
+    block's own control words may hold the *next* block's stream; every lane
+    it could pollute sits at quad index >= the block's own quad count and is
+    masked by the bw=0 clamp in ``decode_arena_block``."""
+    if ld == "B":
+        gsz, fb, gb = B_LAYOUT[cg]
+        idx = jnp.arange(qmax, dtype=jnp.int32)
+        offs = (idx // gsz) * gb + (idx % gsz) * fb
+        return gather_bits_jnp(control, offs,
+                               jnp.full(qmax, fb, jnp.int32)).astype(jnp.int32) + 1
+    if ld == "CU":
+        bits = _control_bits_jnp(control)
+        zcum = jnp.cumsum(jnp.uint32(1) - bits)
+        j = jnp.arange(bits.shape[0], dtype=jnp.int32)
+        # the block's own stream contains its quads' zeros first, so slots
+        # below the block's quad count are written only by genuine zeros
+        # no unique_indices promise: every bits==1 lane shares the qmax
+        # sentinel (dropped), and duplicate sentinels are undefined behavior
+        # under that flag on compiled backends
+        idx = jnp.where(bits == 0, (zcum - 1).astype(jnp.int32), qmax)
+        zpos = jnp.zeros(qmax, jnp.int32).at[idx].set(j, mode="drop")
+        prev = jnp.concatenate([jnp.full(1, -1, jnp.int32), zpos[:-1]])
+        return zpos - prev
+    # IU: byte-at-a-time LUT decode; ctrl_len masks slack bytes entirely
+    by = control.astype(jnp.int32)
+    counts = jnp.where(jnp.arange(by.shape[0]) < ctrl_len, IU_COUNT_J[by], 0)
+    lds = IU_LDS_J[by]
+    base = jnp.cumsum(counts) - counts
+    idx = base[:, None] + jnp.arange(8, dtype=jnp.int32)[None, :]
+    slot_ok = jnp.arange(8, dtype=jnp.int32)[None, :] < counts[:, None]
+    idx = jnp.where(slot_ok, idx, qmax)
+    return jnp.zeros(qmax, jnp.int32).at[idx.reshape(-1)].set(
+        lds.reshape(-1), mode="drop")
+
+
+def decode_arena_block(control: jnp.ndarray, data: jnp.ndarray,
+                       ctrl_len: jnp.ndarray, n_valid: jnp.ndarray,
+                       *, variant: str) -> jnp.ndarray:
+    """Fixed-shape single-block decode for the device arena
+    (``repro.index.device``): the ``decode_jax_vec`` formulation with padded
+    static shapes and dynamic lengths, so a work-list of (term, block) pairs
+    decodes lane-parallel under one ``vmap``/``jit``.
+
+    control: (ctrl_width,) uint32 slice of the control arena (see
+             ``arena_block_ctrl`` for the per-LD layout).
+    data:    (4 * (qmax + 2),) uint32 gathered from the data arena; reshaped
+             to (qmax + 2, 4) component words with 2 rows of gather slack.
+    ctrl_len: dynamic control length (bytes for IU, words otherwise).
+    n_valid:  dynamic integer count of this block.
+    Returns (4 * qmax,) uint32 values, zero beyond ``n_valid``.
+    """
+    cg, ld = _split(variant)
+    dataw = data.reshape(-1, 4)
+    qmax = dataw.shape[0] - 2
+    q = jnp.arange(qmax, dtype=jnp.int32)
+    q_len = (n_valid + 3) >> 2
+    nunits = _arena_nunits(control, ctrl_len, qmax, cg, ld)
+    # quads past the block consume 0 data bits, so valid quads' offsets are
+    # unaffected by whatever the slack lanes decoded
+    bw = jnp.where(q < q_len, nunits * cg, 0).astype(jnp.uint32)
+    ends = jnp.cumsum(bw)
+    offs = (ends - bw).astype(jnp.int32)
+    word = offs >> 5
+    bit = (offs & 31).astype(jnp.uint32)[:, None]
+    lo = dataw[word]
+    hi = dataw[word + 1]
+    val = jnp.right_shift(lo, bit) | jnp.where(
+        bit == 0, jnp.uint32(0), jnp.left_shift(hi, jnp.uint32(32) - bit))
+    val = val & mask_jnp(bw)[:, None]
+    out = val.reshape(-1)
+    i = jnp.arange(4 * qmax, dtype=jnp.int32)
+    return jnp.where(i < n_valid, out, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "q", "variant", "n_control_bytes"))
 def decode_jax_scalar(control, data, n: int, q: int, variant: str, n_control_bytes: int = 0):
     """Paper-faithful scalar decode: one quadruple per scan step.

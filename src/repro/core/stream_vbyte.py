@@ -98,6 +98,34 @@ def decode_jax_vec(control, data, n: int):
     return val
 
 
+def decode_arena_block(control: jnp.ndarray, data: jnp.ndarray,
+                       ctrl_len: jnp.ndarray, n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-shape single-block decode for the device arena
+    (``repro.index.device``): padded static shapes + dynamic length, so a
+    work-list of (term, block) pairs decodes lane-parallel under ``vmap``.
+
+    control: (C_MAX,) uint32, one control byte per entry (entries past
+             ``ctrl_len`` are arena slack — possibly the next block's bytes —
+             and every read they feed is masked by ``i < n_valid`` below).
+    data:    (D_MAX,) uint32, one payload byte per entry, gathered from the
+             data arena with >= 3 entries of slack past the worst-case block.
+    ctrl_len, n_valid: dynamic control-byte / integer counts of this block.
+    Returns (4 * C_MAX,) uint32 values, zero beyond ``n_valid``.
+    """
+    nmax = 4 * control.shape[0]
+    i = jnp.arange(nmax, dtype=jnp.int32)
+    code = (control[i >> 2] >> ((i & 3).astype(jnp.uint32) * 2)) & jnp.uint32(3)
+    # invalid lanes consume 0 payload bytes so the cumsum of lengths (and
+    # therefore every valid lane's byte offset) is unaffected by slack
+    nb = jnp.where(i < n_valid, code.astype(jnp.int32) + 1, 0)
+    starts = jnp.cumsum(nb) - nb
+    val = jnp.zeros(nmax, jnp.uint32)
+    for j in range(4):
+        byte = data[starts + j]            # in-bounds: data has >= 3 slack bytes
+        val = val | jnp.where(j < nb, byte << jnp.uint32(8 * j), jnp.uint32(0))
+    return jnp.where(i < n_valid, val, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def decode_jax_scalar(control, data, n: int):
     """Paper-style sequential decode: one integer per scan step."""

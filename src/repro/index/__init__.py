@@ -6,23 +6,50 @@ Layers (bottom up):
     with any codec from ``repro.core.codec.REGISTRY``; lists shorter than 64
     use the Stream VByte short-list fast path.  Every 512-posting block keeps
     its first docid as a skip pointer and decodes independently.
-  * ``query`` — stateless one-shot AND/OR/BM25 helpers.
-  * ``engine`` — the batched query engine: ``QueryBatch`` groups queries by
-    term overlap, AND queries fuse skip-table block pruning with the
-    vectorized intersection kernels (``repro.kernels.intersect``), and hot
-    decoded blocks live in an LRU keyed by (term, block) so a batch decodes
-    each block at most once.
-  * ``device`` — device-resident posting arenas: the compressed blocks
-    flattened into contiguous device arrays with per-(term, block)
+  * ``query`` — stateless one-shot AND/OR/BM25 helpers (deprecation shims
+    over single-query plans).
+  * ``engine`` — the batched query engine: ``engine.plan(batch)`` resolves a
+    ``QueryBatch`` into a typed ``ExecutionPlan`` — placement (host / device
+    / fused) plus every referenced term's codec capabilities, read once from
+    the registry — and ``engine.execute(plan)`` runs it: AND queries fuse
+    skip-table block pruning with the vectorized intersection kernels
+    (``repro.kernels.intersect``), and hot decoded blocks live in an LRU
+    keyed by (term, block) so a batch decodes each block at most once.
+  * ``device`` — device-resident posting arenas, built *generically* from
+    each codec's declared ``ArenaLayout``: the compressed blocks flattened
+    into contiguous per-codec device arrays with per-(term, block)
     offset/length/first-docid tables.  ``engine.to_device()`` switches the
     serving path onto batched lane-parallel work-list decodes (one jitted
-    call per AND round, deduped across the batch) and optionally the fused
-    decode+bitmap-AND Pallas kernel (``repro.kernels.decode_fused``).
+    call per codec per AND round, deduped across the batch) and optionally
+    the fused decode+bitmap-AND Pallas kernel (``repro.kernels.decode_fused``).
 
-Adding a codec: implement ``encode(np.uint32[N]) -> Encoded`` and
-``decode(Encoded) -> np.uint32[N]`` (plus optional JAX scalar/vec decoders),
-register a ``CodecSpec`` in ``repro/core/codec.py``, and the index, engine,
-differential tests, and benchmarks pick it up by name automatically.
+Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
+and ``decode_np(Encoded) -> np.uint32[N]`` and register a
+``repro.core.codec.Codec`` in ``repro/core/codec.py``.  Capabilities are
+*declared*, not special-cased:
+
+  * add a ``JaxDecode(args, scalar, vec)`` capability and the codec joins the
+    scalar-vs-SIMD decode benchmarks and differential tests;
+  * add an ``ArenaLayout`` (padded control/data/output widths for one
+    512-posting block + a fixed-shape ``decode_block(ctrl, data, ctrl_len,
+    n_valid)``) and the codec's blocks decode natively in the device arena's
+    batched work-lists — the arena, engine, parity tests
+    (``tests/test_device_arena.py`` derives its sweep from the declarations),
+    and the CI registry lint (``tools/registry_lint.py``) pick it up with no
+    engine edits.
+
+Migration note (deprecated v1 surface, kept as delegating shims):
+
+  * ``engine.execute(QueryBatch(...))`` -> ``engine.execute(engine.plan(
+    QueryBatch(...)))``; results are bit-identical.
+  * ``QueryEngine(idx, device=True, fused=True)`` -> ``QueryEngine(idx)
+    .to_device(fused=True)`` (the constructor flags warn ``DeprecationWarning``).
+  * ``repro.index.query.and_query/or_query/and_query_scored`` -> build an
+    engine and execute plans; the helpers now delegate to single-query plans.
+  * ``CodecSpec`` and its ``decode`` / ``jax_args`` / ``decode_jax_scalar`` /
+    ``decode_jax_vec`` attributes -> ``Codec`` with ``decode_np`` and the
+    ``jax`` / ``arena`` capability objects (old attributes remain as
+    read-only aliases).
 """
 
 from . import device, engine, invindex, query  # noqa: F401

@@ -5,34 +5,35 @@ The host engine (``repro.index.engine``) stores every (term, block) as its own
 little ``Encoded`` and decodes through Python one block at a time, so the
 paper's SIMD-decode win (Table VII) never reaches the serving path: per AND
 round the engine pays O(selected blocks) interpreter iterations.  A
-``DeviceArena`` flattens the whole index once at build time:
+``DeviceArena`` flattens the whole index once at build time — and it does so
+*generically*: any codec whose registry entry declares an
+:class:`repro.core.codec.ArenaLayout` capability participates, with zero
+codec-name dispatch in this module.  Per declared layout the arena holds:
 
-  * **data arena** — every supported block's data words, concatenated into one
-    uint32 device array (ids and TFs are separate entries of the same arena).
-  * **control arena** — the matching selector / bit-width streams.
-  * **tables** — per-entry offset, length, posting count and first-docid
-    (skip-table) columns, so any (term, block, field) is addressable on device
-    by a handful of integers.
+  * **control arena** — every block's control words (selectors / bit widths /
+    control bytes, per the codec's own layout), concatenated into one device
+    array of the layout's ``ctrl_dtype``.
+  * **data arena** — the matching data words as one uint32 device array (ids
+    and TFs are separate entries of the same arena).
+  * **tables** — per-entry control offset/length, data offset, posting count
+    and first-docid (skip-table) columns, so any (term, block, field) is
+    addressable on device by a handful of integers.
 
 On top sit two batched execution paths:
 
-  * ``decode_blocks`` — ONE jitted call decodes a whole work-list of entries
-    lane-parallel: each work-list lane gathers its padded selector/data slice
-    from the arenas (``dynamic_slice`` under ``vmap``) and runs the
-    fixed-shape arena decoders (``group_simple.decode_arena_block``,
-    ``bp128.decode_arena_block``), fused with the d-gap prefix sum and
-    first-docid add.  Work-lists are padded to power-of-two buckets so jit
-    variants stay bounded.  Supported codecs: ``group_simple`` and the
-    BP128 family (``bp128``, ``g_packed_binary``); anything else (notably the
-    ``stream_vbyte`` short-list blocks) falls back to the numpy decoder per
-    block, preserving exact results for every registered codec.
+  * ``decode_blocks`` — ONE jitted call per codec present in the work-list
+    decodes all of that codec's entries lane-parallel: each work-list lane
+    gathers its padded control/data slice from the arenas (``dynamic_slice``
+    under ``vmap``) and runs the layout's fixed-shape ``decode_block``, fused
+    with the d-gap prefix sum and first-docid add.  Work-lists are padded to
+    power-of-two buckets so jit variants stay bounded.  Blocks whose codec
+    declares no arena capability (and empty blocks) fall back to the numpy
+    decoder per block, preserving exact results for every registered codec.
   * ``fused_and`` — the ``kernels/decode_fused`` Pallas path: block gaps
     re-packed into fixed (rows, 128) tiles at the block's own bit width
-    rounded up to a small bucket set (the same TPU-native re-layout
-    ``bp_tpu`` applies to streams), decoded *and*
-    intersected against a query's candidate bitmap inside VMEM, with the
-    skip-selected next block's DMA double-buffered via scalar-prefetched
-    work-list indices.
+    rounded up to ``decode_fused.BW_BUCKETS``, decoded *and* intersected
+    against a query's candidate bitmap inside VMEM, with the skip-selected
+    next block's DMA double-buffered via scalar-prefetched work-list indices.
 
 ``stats`` counts device calls and blocks decoded per path; the engine's
 work-list dedup guarantees <= 1 decode per hot (term, block) per batch, which
@@ -47,20 +48,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bp128 as bp128_lib
-from repro.core import group_simple
+from repro.core import codec as codec_lib
 from repro.core.bits import ebw_np
 from repro.kernels import decode_fused
 from repro.kernels.bitpack import LANES
-from repro.kernels.decode_fused import BLOCK_ROWS
 from repro.kernels.intersect import bitmap_build_np
 
-KIND_GS, KIND_BP, KIND_HOST = 0, 1, 2
-BP_FAMILY = ("bp128", "g_packed_binary")
-SUPPORTED = ("group_simple",) + BP_FAMILY
-
-GS_PMAX = 128                 # max Group-Simple vectors in a 512-posting block
-BP_WMAX = 128                 # max data words per component per block
 _MIN_WORKLIST = 8             # smallest jit bucket
 
 
@@ -83,39 +76,86 @@ def _pad_rows(cols: list[np.ndarray], w: int) -> list[jnp.ndarray]:
     return out
 
 
-@jax.jit
-def _gs_decode_batch(sels_arena, data_arena, sel_off, p_len, dat_off, n,
-                     first, is_delta):
-    """Work-list decode over the Group-Simple arenas, one lane per block."""
+@functools.partial(jax.jit, static_argnames=("decode", "cw", "dw"))
+def _decode_worklist(ctrl_arena, data_arena, ctrl_off, ctrl_len, dat_off, n,
+                     first, is_delta, *, decode, cw, dw):
+    """Work-list decode over one codec's arenas, one lane per block.
 
-    def one(so, pl_, do, nn, fi, dl):
-        sels = jax.lax.dynamic_slice(sels_arena, (so,), (GS_PMAX,))
-        data = jax.lax.dynamic_slice(data_arena, (do,), (4 * GS_PMAX,))
-        vals = group_simple.decode_arena_block(sels, data.reshape(GS_PMAX, 4),
-                                               pl_, nn)
+    ``decode`` is the codec's declared ``ArenaLayout.decode_block`` — a
+    stable registry object, so the jit cache stays bounded by the number of
+    registered arena layouts times the work-list buckets.
+    """
+
+    def one(co, cl, do, nn, fi, dl):
+        ctrl = jax.lax.dynamic_slice(ctrl_arena, (co,), (cw,))
+        data = jax.lax.dynamic_slice(data_arena, (do,), (dw,))
+        vals = decode(ctrl, data, cl, nn)
         ids = jnp.cumsum(vals, dtype=jnp.uint32) + fi
         i = jnp.arange(vals.shape[0], dtype=jnp.int32)
         return jnp.where(dl, jnp.where(i < nn, ids, 0), vals)
 
-    return jax.vmap(one)(sel_off, p_len, dat_off, n, first, is_delta)
+    return jax.vmap(one)(ctrl_off, ctrl_len, dat_off, n, first, is_delta)
 
 
-@functools.partial(jax.jit, static_argnames=("frame_quads",))
-def _bp_decode_batch(ctrl_arena, data_arena, ctrl_off, dat_off, n, first,
-                     is_delta, frame_quads):
-    """Work-list decode over the BP128-family arenas, one lane per block."""
-    cmax = -(-BP_WMAX // frame_quads)
+class _ArenaGroup:
+    """Contiguous control/data arenas + per-entry tables for one codec."""
 
-    def one(co, do, nn, fi, dl):
-        ctrl = jax.lax.dynamic_slice(ctrl_arena, (co,), (cmax,))
-        data = jax.lax.dynamic_slice(data_arena, (do,), (4 * (BP_WMAX + 2),))
-        vals = bp128_lib.decode_arena_block(ctrl, data.reshape(BP_WMAX + 2, 4),
-                                            nn, frame_quads)
-        ids = jnp.cumsum(vals, dtype=jnp.uint32) + fi
-        i = jnp.arange(vals.shape[0], dtype=jnp.int32)
-        return jnp.where(dl, jnp.where(i < nn, ids, 0), vals)
+    def __init__(self, name: str, layout):
+        self.name = name
+        self.layout = layout
+        self._ctrl_parts: list = []
+        self._data_parts: list = []
+        self.tab: dict = {k: [] for k in ("ctrl_off", "ctrl_len", "dat_off",
+                                          "n", "first")}
+        self._co = self._do = 0
 
-    return jax.vmap(one)(ctrl_off, dat_off, n, first, is_delta)
+    def add(self, enc, first: int) -> int:
+        lay = self.layout
+        assert enc.n <= lay.max_n, (self.name, enc.n)
+        ctrl = np.asarray(lay.block_ctrl(enc), lay.ctrl_dtype).reshape(-1)
+        data = np.asarray(lay.block_data(enc), np.uint32).reshape(-1)
+        assert ctrl.size <= lay.ctrl_width and data.size <= lay.data_width, \
+            (self.name, ctrl.size, data.size)
+        slot = len(self.tab["n"])
+        self.tab["ctrl_off"].append(self._co)
+        self.tab["ctrl_len"].append(ctrl.size)
+        self.tab["dat_off"].append(self._do)
+        self.tab["n"].append(enc.n)
+        self.tab["first"].append(first)
+        self._ctrl_parts.append(ctrl)
+        self._data_parts.append(data)
+        self._co += ctrl.size
+        self._do += data.size
+        return slot
+
+    def finalize(self) -> "_ArenaGroup":
+        lay = self.layout
+        # trailing slack so the fixed-size dynamic_slice gathers never clamp
+        self.ctrl = jnp.asarray(np.concatenate(
+            self._ctrl_parts + [np.zeros(lay.ctrl_width, lay.ctrl_dtype)]))
+        self.data = jnp.asarray(np.concatenate(
+            self._data_parts + [np.zeros(lay.data_width, np.uint32)]))
+        self.tab = {k: np.asarray(v, np.uint32 if k == "first" else np.int32)
+                    for k, v in self.tab.items()}
+        self._ctrl_parts = self._data_parts = None
+        return self
+
+    def decode(self, items: list, out: list) -> None:
+        """Decode [(out_index, slot, (t, bi, field)), ...] in one jitted call;
+        field 0 entries get the d-gap prefix sum + first docid fused in."""
+        slots = np.asarray([slot for _, slot, _ in items], np.int64)
+        w = _bucket(len(items))
+        ns = self.tab["n"][slots]
+        delta = np.asarray([e[2] == 0 for _, _, e in items])
+        cols = _pad_rows([self.tab["ctrl_off"][slots],
+                          self.tab["ctrl_len"][slots],
+                          self.tab["dat_off"][slots], ns,
+                          self.tab["first"][slots], delta], w)
+        res = np.asarray(_decode_worklist(
+            self.ctrl, self.data, *cols, decode=self.layout.decode_block,
+            cw=self.layout.ctrl_width, dw=self.layout.data_width))
+        for row, ((j, _, _), n) in enumerate(zip(items, ns)):
+            out[j] = res[row, :n].copy()
 
 
 class DeviceArena:
@@ -125,8 +165,14 @@ class DeviceArena:
     ``QueryEngine.to_device()``); decode any work-list of (term, block, field)
     entries with ``decode_blocks`` (field 0 = docids, 1 = TFs), or intersect a
     term's skip-selected blocks against a candidate set on device with
-    ``fused_and``.
+    ``fused_and``.  Coverage is capability-driven: every codec declaring an
+    ``ArenaLayout`` in the registry decodes natively; the rest fall back to
+    the numpy oracle per block.
     """
+
+    # kept as a class attribute for callers that sized things off the arena;
+    # the buckets themselves are owned by the fused kernel
+    FUSED_BW_BUCKETS = decode_fused.BW_BUCKETS
 
     def __init__(self, idx, build_fused: bool = True):
         self.idx = idx
@@ -134,6 +180,7 @@ class DeviceArena:
         self.stats = {"device_calls": 0, "blocks_device": 0, "blocks_host": 0,
                       "fused_calls": 0, "fused_blocks": 0}
         self._loc: dict = {}
+        self._groups: dict = {}
         self._build_compressed_arenas(idx)
         self._pk = None
         if build_fused:
@@ -142,74 +189,25 @@ class DeviceArena:
     # ---- build ------------------------------------------------------------- #
 
     def _build_compressed_arenas(self, idx) -> None:
-        gs_sels, gs_data = [], []
-        gs = {k: [] for k in ("sel_off", "p_len", "dat_off", "n", "first")}
-        bp_ctrl, bp_data = [], []
-        bp = {k: [] for k in ("ctrl_off", "dat_off", "n", "first")}
-        so = do = co = bo = 0
-        self._bp_frame_quads = None
+        staging: dict = {}
         for t, tp in idx.terms.items():
             for bi, (first, encg, enct) in enumerate(tp.blocks):
                 for field, enc, fi in ((0, encg, first), (1, enct, 0)):
                     key = (t, bi, field)
-                    if enc.codec == "group_simple" and enc.n:
-                        sels = np.asarray(enc.meta["sels"], np.int32)
-                        self._loc[key] = (KIND_GS, len(gs["n"]))
-                        gs["sel_off"].append(so)
-                        gs["p_len"].append(len(sels))
-                        gs["dat_off"].append(do)
-                        gs["n"].append(enc.n)
-                        gs["first"].append(fi)
-                        gs_sels.append(sels)
-                        gs_data.append(np.asarray(enc.data, np.uint32).reshape(-1))
-                        so += sels.size
-                        do += gs_data[-1].size
-                    elif enc.codec in BP_FAMILY and enc.n:
-                        fq = enc.meta["frame_quads"]
-                        if self._bp_frame_quads is None:
-                            self._bp_frame_quads = fq
-                        assert self._bp_frame_quads == fq, "mixed BP layouts"
-                        ctrl = np.asarray(enc.control, np.int32)
-                        self._loc[key] = (KIND_BP, len(bp["n"]))
-                        bp["ctrl_off"].append(co)
-                        bp["dat_off"].append(bo)
-                        bp["n"].append(enc.n)
-                        bp["first"].append(fi)
-                        bp_ctrl.append(ctrl)
-                        bp_data.append(np.asarray(enc.data, np.uint32).reshape(-1))
-                        co += ctrl.size
-                        bo += bp_data[-1].size
-                    else:
-                        self._loc[key] = (KIND_HOST, -1)
-        # trailing slack so the fixed-size dynamic_slice gathers never clamp
-        self._gs = None
-        if gs["n"]:
-            self._gs = {k: np.asarray(v, np.uint32 if k == "first" else np.int32)
-                        for k, v in gs.items()}
-            self._gs_sels = jnp.asarray(np.concatenate(
-                gs_sels + [np.zeros(GS_PMAX, np.int32)]))
-            self._gs_data = jnp.asarray(np.concatenate(
-                gs_data + [np.zeros(4 * GS_PMAX, np.uint32)]))
-        self._bp = None
-        if bp["n"]:
-            self._bp = {k: np.asarray(v, np.uint32 if k == "first" else np.int32)
-                        for k, v in bp.items()}
-            cmax = -(-BP_WMAX // self._bp_frame_quads)
-            self._bp_ctrl = jnp.asarray(np.concatenate(
-                bp_ctrl + [np.zeros(cmax, np.int32)]))
-            self._bp_data = jnp.asarray(np.concatenate(
-                bp_data + [np.zeros(4 * (BP_WMAX + 2), np.uint32)]))
-
-    # per-block widths round up to one of these, so a single outlier gap
-    # widens only its own bucket instead of the whole arena (and the fused
-    # kernel compiles at most this many bw variants)
-    FUSED_BW_BUCKETS = (4, 8, 12, 16, 24, 32)
+                    lay = codec_lib.get(enc.codec).arena if enc.n else None
+                    if lay is None or not lay.supports(enc):
+                        self._loc[key] = (None, -1)
+                        continue
+                    g = staging.get(enc.codec)
+                    if g is None:
+                        g = staging[enc.codec] = _ArenaGroup(enc.codec, lay)
+                    self._loc[key] = (enc.codec, g.add(enc, fi))
+        self._groups = {name: g.finalize() for name, g in staging.items()}
 
     def ensure_fused(self) -> "DeviceArena":
         """Build the fused-kernel tile arenas if absent: every block's d-gaps
-        re-packed into fixed (rows, 128) tiles — the layout
-        ``kernels/decode_fused`` consumes — grouped into per-bit-width
-        buckets."""
+        re-packed into the fixed (rows, 128) tiles ``kernels/decode_fused``
+        consumes, grouped into per-bit-width buckets."""
         if self._pk is not None:
             return self
         idx = self.idx
@@ -217,14 +215,14 @@ class DeviceArena:
         self._pk_slot = {}
         cw = -(-self.n_docs // 32)
         self._cand_rows = max(1, -(-cw // LANES))
-        staged: dict = {bw: [] for bw in self.FUSED_BW_BUCKETS}
+        staged: dict = {bw: [] for bw in decode_fused.BW_BUCKETS}
         for t, tp in idx.terms.items():
             for bi in range(len(tp.blocks)):
                 ids = idx.decode_block_ids(t, bi)
                 g = np.zeros(len(ids), np.uint32)
                 g[1:] = ids[1:] - ids[:-1]
                 ebw = max(1, int(ebw_np(g.max(initial=0))))
-                bw = next(b for b in self.FUSED_BW_BUCKETS if b >= ebw)
+                bw = next(b for b in decode_fused.BW_BUCKETS if b >= ebw)
                 staged[bw].append(((t, bi), tp.blocks[bi][0], g))
         for bw, items in staged.items():
             if not items:
@@ -236,16 +234,7 @@ class DeviceArena:
                 self._pk_slot[key] = (bw, s)
                 firsts.append(first)
                 ns.append(len(g))
-                vals = np.zeros(BLOCK_ROWS * LANES, np.uint32)
-                vals[: len(g)] = g
-                vals = vals.reshape(BLOCK_ROWS, LANES).astype(np.uint64)
-                tile = tiles[s * rpb:(s + 1) * rpb]
-                for r in range(BLOCK_ROWS):
-                    start = r * bw
-                    w, off = start // 32, start % 32
-                    tile[w] |= ((vals[r] << off) & 0xFFFFFFFF).astype(np.uint32)
-                    if off + bw > 32:
-                        tile[w + 1] |= (vals[r] >> (32 - off)).astype(np.uint32)
+                tiles[s * rpb:(s + 1) * rpb] = decode_fused.pack_gaps(g, bw)
             self._pk[bw] = {"tiles": jnp.asarray(tiles),
                             "first": np.asarray(firsts, np.uint32),
                             "n": np.asarray(ns, np.int32)}
@@ -255,52 +244,40 @@ class DeviceArena:
     def from_index(cls, idx, build_fused: bool = True) -> "DeviceArena":
         return cls(idx, build_fused=build_fused)
 
+    # ---- capability probes -------------------------------------------------- #
+
+    def covers(self, key) -> bool:
+        """True if (term, block, field) decodes natively on device."""
+        return self._loc[key][0] is not None
+
     # ---- batched work-list decode ------------------------------------------ #
 
     def decode_blocks(self, entries: list) -> list:
         """Decode a work-list of (term, block, field) entries; field 0 decodes
         docids (d-gap prefix sum + first docid fused in), field 1 raw TFs.
 
-        One jitted device call per represented kind; unsupported-codec entries
-        decode through the numpy oracle.  Returns arrays aligned with
-        ``entries``.
+        One jitted device call per codec represented in the work-list;
+        entries without an arena capability decode through the numpy oracle.
+        Returns arrays aligned with ``entries``.
         """
         out: list = [None] * len(entries)
-        by_kind: dict = {KIND_GS: [], KIND_BP: [], KIND_HOST: []}
+        by_codec: dict = {}
+        host: list = []
         for j, e in enumerate(entries):
-            kind, slot = self._loc[e]
-            by_kind[kind].append((j, slot, e))
-        if by_kind[KIND_GS]:
-            self._run_batch(by_kind[KIND_GS], out, KIND_GS)
-        if by_kind[KIND_BP]:
-            self._run_batch(by_kind[KIND_BP], out, KIND_BP)
-        for j, _, (t, bi, field) in by_kind[KIND_HOST]:
+            name, slot = self._loc[e]
+            if name is None:
+                host.append((j, e))
+            else:
+                by_codec.setdefault(name, []).append((j, slot, e))
+        for name, items in by_codec.items():
+            self._groups[name].decode(items, out)
+            self.stats["device_calls"] += 1
+            self.stats["blocks_device"] += len(items)
+        for j, (t, bi, field) in host:
             out[j] = (self.idx.decode_block_ids(t, bi) if field == 0
                       else self.idx.decode_block_tfs(t, bi))
             self.stats["blocks_host"] += 1
         return out
-
-    def _run_batch(self, items: list, out: list, kind: int) -> None:
-        tab = self._gs if kind == KIND_GS else self._bp
-        slots = np.asarray([slot for _, slot, _ in items], np.int64)
-        w = _bucket(len(items))
-        ns = tab["n"][slots]
-        delta = np.asarray([e[2] == 0 for _, _, e in items])
-        if kind == KIND_GS:
-            cols = _pad_rows([tab["sel_off"][slots], tab["p_len"][slots],
-                              tab["dat_off"][slots], ns,
-                              tab["first"][slots], delta], w)
-            res = _gs_decode_batch(self._gs_sels, self._gs_data, *cols)
-        else:
-            cols = _pad_rows([tab["ctrl_off"][slots], tab["dat_off"][slots],
-                              ns, tab["first"][slots], delta], w)
-            res = _bp_decode_batch(self._bp_ctrl, self._bp_data, *cols,
-                                   frame_quads=self._bp_frame_quads)
-        res = np.asarray(res)
-        for row, ((j, _, _), n) in enumerate(zip(items, ns)):
-            out[j] = res[row, :n].copy()
-        self.stats["device_calls"] += 1
-        self.stats["blocks_device"] += len(items)
 
     # ---- fused decode + AND ------------------------------------------------ #
 

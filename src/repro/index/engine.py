@@ -18,31 +18,46 @@ hardware-speed along three axes:
      hot (term, block) is decompressed once into an LRU cache
      (``BlockCache``) and reused across the whole batch.  BM25 per-term score
      vectors are cached the same way for OR queries.
-  4. **Device-resident execution** (``device=True`` / ``to_device()``) — the
-     compressed blocks live in ``repro.index.device.DeviceArena`` arenas; per
-     AND round the engine builds one (term, block, candidate-range) work-list
-     across the *whole batch* on host, dedupes hot blocks so each decodes at
-     most once per batch, and issues ONE jitted lane-parallel decode instead
-     of O(blocks) Python iterations.  With ``fused=True`` eligible term
-     intersections additionally run the ``kernels/decode_fused`` Pallas
+  4. **Device-resident execution** (``to_device()``) — the compressed blocks
+     live in ``repro.index.device.DeviceArena`` arenas; per AND round the
+     engine builds one (term, block, candidate-range) work-list across the
+     *whole batch* on host, dedupes hot blocks so each decodes at most once
+     per batch, and issues ONE jitted lane-parallel decode instead of
+     O(blocks) Python iterations.  Under the ``fused`` placement eligible
+     term intersections additionally run the ``kernels/decode_fused`` Pallas
      kernel: decode + candidate bitmap-AND fused in VMEM, next block
      prefetched.  Results are bit-identical to the host path.
+
+Execution is planned, then run: ``engine.plan(batch)`` resolves *once* where
+the batch runs (placement: host / device / fused) and what every referenced
+term's codec is capable of (:class:`TermCaps`, read from the codec registry's
+declared capabilities), and ``engine.execute(plan)`` just follows the plan —
+the engine contains no per-codec special cases.
 
 Typical use::
 
     engine = QueryEngine(idx, cache_blocks=4096)
-    results = engine.execute(QueryBatch(queries=[[1, 5], [2, 5, 9]], mode="and"))
+    plan = engine.plan(QueryBatch(queries=[[1, 5], [2, 5, 9]], mode="and"))
+    results = engine.execute(plan)
     engine.to_device()                       # device arenas from here on
-    results = engine.execute(QueryBatch(queries=[[1, 5], [2, 5, 9]], mode="and"))
+    results = engine.execute(engine.plan(QueryBatch([[1, 5]], mode="and")))
+
+Deprecated shims (see the migration note in ``repro/index/__init__.py``):
+``execute(QueryBatch)`` plans implicitly; ``QueryEngine(idx, device=True,
+fused=True)`` maps to ``to_device(fused=True)``; the one-shot helpers in
+``repro.index.query`` delegate to plans.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
+from typing import Mapping, Optional
 
 import numpy as np
 
+from repro.core import codec as codec_lib
 from repro.kernels import intersect
 from .invindex import InvertedIndex
 
@@ -124,6 +139,46 @@ class QueryBatch:
     k: int = 10
 
 
+MODES = ("and", "or", "and_scored")
+PLACEMENTS = ("host", "device", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class TermCaps:
+    """One term's execution capabilities, resolved once at plan time from the
+    codec registry's declarations (no codec-name dispatch at run time).
+
+    codec: the codec of the term's posting blocks.
+    arena: the codec declares an ``ArenaLayout`` — its blocks decode natively
+        in the batched device work-list (otherwise they fall back to the
+        per-block numpy oracle inside the arena).
+    fused: the arena's fused decode+AND tiles cover every block of the term.
+    """
+    codec: Optional[str]
+    arena: bool
+    fused: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A typed, resolved execution of one ``QueryBatch``.
+
+    placement: where the batch runs — "host" (numpy per query, grouped by
+        term signature), "device" (round-batched arena work-list decode), or
+        "fused" (device + the fused decode+AND kernel for covered terms).
+    terms: per distinct referenced term, its :class:`TermCaps`.  Unknown
+        terms (absent from the index) are omitted — execution ignores them.
+
+    A plan snapshots engine state (placement follows ``to_device``); build
+    plans after the engine is in its serving configuration.
+    """
+    mode: str
+    k: int
+    placement: str
+    queries: tuple
+    terms: Mapping[int, TermCaps]
+
+
 class QueryEngine:
     def __init__(self, idx: InvertedIndex, cache_blocks: int = 4096,
                  cache_score_terms: int = 512, device: bool = False,
@@ -136,6 +191,13 @@ class QueryEngine:
         self._fused = fused
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
                           "fallback_decodes": 0}
+        if device or fused:
+            # deprecated: construct with defaults and call to_device() instead
+            warnings.warn(
+                "QueryEngine(device=..., fused=...) is deprecated; use "
+                "QueryEngine(idx).to_device(fused=...) and execute plans "
+                "(engine.execute(engine.plan(batch)))",
+                DeprecationWarning, stacklevel=2)
         if device:
             self.to_device(fused=fused)
 
@@ -259,11 +321,17 @@ class QueryEngine:
         cut[-1] = len(cand)
         return cut, np.flatnonzero(cut[1:] > cut[:-1])
 
+    def _term_fused(self, t: int, sel) -> bool:
+        """Fallback capability probe for un-planned calls (``and_query`` and
+        friends); plans resolve this once per term instead."""
+        return (self._fused and self.arena is not None
+                and self.arena.has_fused(t, sel))
+
     def _intersect_plan(self, t: int, cut: np.ndarray, sel: np.ndarray,
-                        cand: np.ndarray) -> np.ndarray:
+                        cand: np.ndarray, fused: bool | None = None) -> np.ndarray:
         if len(sel) == 0:
             return np.zeros(0, np.uint32)
-        if self._fused and self.arena is not None and self.arena.has_fused(t, sel):
+        if self._term_fused(t, sel) if fused is None else fused:
             return self.arena.fused_and(t, sel, cand)
         out = [intersect.intersect_sorted(self.decode_block_ids(t, int(bi)),
                                           cand[cut[bi]:cut[bi + 1]])
@@ -276,7 +344,8 @@ class QueryEngine:
         cut, sel = self._block_plan(t, cand)
         return self._intersect_plan(t, cut, sel, cand)
 
-    def and_many(self, queries: list) -> list:
+    def and_many(self, queries: list,
+                 terms: Mapping[int, TermCaps] | None = None) -> list:
         """AND all queries together, round-batched for the device arenas.
 
         Round r intersects every still-active query with its (r+1)-th rarest
@@ -285,7 +354,14 @@ class QueryEngine:
         most once per batch and the Python-loop count drops from O(total
         selected blocks) to O(rounds).  Results are bit-identical to
         ``and_query`` per query.
+
+        ``terms`` is the plan's resolved per-term capability map; when absent
+        (direct calls) capabilities are probed on the fly.
         """
+        def term_fused(t, sel):
+            return (terms[t].fused if terms is not None
+                    else self._term_fused(t, sel))
+
         qterms = [sorted((t for t in q if t in self.idx.terms),
                          key=lambda t: self.idx.terms[t].df) for q in queries]
         for ts in qterms:               # raw seed-term block references,
@@ -305,16 +381,16 @@ class QueryEngine:
             for i in active:
                 t = qterms[i][r]
                 cut, sel = self._block_plan(t, cands[i])
-                plans[i] = (t, cut, sel)
+                fused = term_fused(t, sel)
+                plans[i] = (t, cut, sel, fused)
                 self.dev_stats["worklist_refs"] += len(sel)
-                if self.arena is not None and not (
-                        self._fused and self.arena.has_fused(t, sel)):
+                if self.arena is not None and not fused:
                     worklist.extend((t, int(bi), 0) for bi in sel)
             if self.arena is not None:
                 self._prefetch_blocks(worklist)
             for i in active:
-                t, cut, sel = plans[i]
-                cands[i] = self._intersect_plan(t, cut, sel, cands[i])
+                t, cut, sel, fused = plans[i]
+                cands[i] = self._intersect_plan(t, cut, sel, cands[i], fused)
                 owned[i] = True
             r += 1
         return [c if o else c.copy() for c, o in zip(cands, owned)]
@@ -384,39 +460,88 @@ class QueryEngine:
     def and_query_scored(self, terms: list, k: int = 10):
         return self._score_docs(terms, self.and_query(terms), k)
 
-    # ---- batched execution ------------------------------------------------- #
+    # ---- planned execution -------------------------------------------------- #
 
-    def execute(self, batch: QueryBatch) -> list:
-        """Run every query in the batch; results align with batch.queries.
+    def plan(self, batch: QueryBatch) -> ExecutionPlan:
+        """Resolve a batch into a typed :class:`ExecutionPlan`: placement
+        (host / device / fused, following the engine's current arena state)
+        plus every referenced term's codec capabilities, read once from the
+        codec registry's declarations.  ``execute(plan)`` then runs with no
+        per-codec or per-flag branching."""
+        if batch.mode not in MODES:
+            raise KeyError(batch.mode)
+        placement = ("fused" if self.arena is not None and self._fused else
+                     "device" if self.arena is not None else "host")
+        terms: dict[int, TermCaps] = {}
+        for q in batch.queries:
+            for t in q:
+                if t in terms or t not in self.idx.terms:
+                    continue
+                blocks = self.idx.terms[t].blocks
+                name = blocks[0][1].codec if blocks else None
+                spec = codec_lib.get(name) if name is not None else None
+                terms[t] = TermCaps(
+                    codec=name,
+                    arena=bool(spec is not None and spec.arena is not None),
+                    fused=(placement == "fused" and self.arena.has_fused(
+                        t, range(len(blocks)))))
+        return ExecutionPlan(mode=batch.mode, k=batch.k, placement=placement,
+                             queries=tuple(tuple(q) for q in batch.queries),
+                             terms=terms)
 
-        On the host path queries are processed grouped by sorted term
+    def execute(self, work) -> list:
+        """Run an :class:`ExecutionPlan`; results align with the planned
+        queries.  Passing a ``QueryBatch`` is a deprecated shim that plans
+        implicitly (bit-identical results).
+
+        On the host placement queries are processed grouped by sorted term
         signature so queries sharing terms hit the decoded-block/score caches
-        back to back.  On the device path (``to_device()``) AND semantics run
+        back to back.  On the device/fused placements AND semantics run
         round-batched through ``and_many`` — one deduped arena decode per
         round across the whole batch — and OR/scored modes prefetch every
         needed (term, block) in one arena call before scoring.
         """
-        if batch.mode not in ("and", "or", "and_scored"):
-            raise KeyError(batch.mode)
-        if self.arena is not None:
-            return self._execute_device(batch)
+        if isinstance(work, QueryBatch):
+            work = self.plan(work)
+        plan: ExecutionPlan = work
+        if plan.mode not in MODES:
+            raise KeyError(plan.mode)
+        if plan.placement != "host" and self.arena is None:
+            raise ValueError(
+                f"plan placement {plan.placement!r} needs device arenas; call "
+                "to_device() on this engine (or re-plan on it) first")
+        if plan.placement == "fused" and self.arena._pk is None:
+            raise ValueError(
+                "plan placement 'fused' needs fused tile arenas; call "
+                "to_device(fused=True) on this engine (or re-plan on it) first")
+        if plan.placement != "host":
+            return self._execute_device(plan)
         fn = {"and": self.and_query,
-              "or": lambda q: self.or_query(q, batch.k),
-              "and_scored": lambda q: self.and_query_scored(q, batch.k)}[batch.mode]
-        order = sorted(range(len(batch.queries)),
-                       key=lambda i: tuple(sorted(batch.queries[i])))
-        results = [None] * len(batch.queries)
-        for i in order:
-            results[i] = fn(batch.queries[i])
+              "or": lambda q: self.or_query(q, plan.k),
+              "and_scored": lambda q: self.and_query_scored(q, plan.k)}[plan.mode]
+        order = sorted(range(len(plan.queries)),
+                       key=lambda i: tuple(sorted(plan.queries[i])))
+        results = [None] * len(plan.queries)
+        # a host plan stays pinned to host intersection even on an engine
+        # that has since gained fused arenas — placement is the plan's
+        # contract, not a hint.  (Block *decodes* still use the engine's
+        # current backend; the bits are identical either way.)
+        prev_fused, self._fused = self._fused, False
+        try:
+            for i in order:
+                results[i] = fn(list(plan.queries[i]))
+        finally:
+            self._fused = prev_fused
         return results
 
-    def _execute_device(self, batch: QueryBatch) -> list:
-        if batch.mode == "and":
-            return self.and_many(batch.queries)
-        if batch.mode == "and_scored":
-            docs = self.and_many(batch.queries)
-            self._prefetch_terms({t for q in batch.queries for t in q})
-            return [self._score_docs(q, d, batch.k)
-                    for q, d in zip(batch.queries, docs)]
-        self._prefetch_terms({t for q in batch.queries for t in q})
-        return [self.or_query(q, batch.k) for q in batch.queries]
+    def _execute_device(self, plan: ExecutionPlan) -> list:
+        queries = [list(q) for q in plan.queries]
+        if plan.mode == "and":
+            return self.and_many(queries, plan.terms)
+        if plan.mode == "and_scored":
+            docs = self.and_many(queries, plan.terms)
+            self._prefetch_terms({t for q in queries for t in q})
+            return [self._score_docs(q, d, plan.k)
+                    for q, d in zip(queries, docs)]
+        self._prefetch_terms({t for q in queries for t in q})
+        return [self.or_query(q, plan.k) for q in queries]

@@ -1,6 +1,7 @@
 """Compressed inverted index (paper §7.4/§7.5).
 
-Per term: d-gapped docids + TFs compressed with a selected codec; posting
+Per term: d-gapped docids + TFs compressed with a selected codec from the
+``repro.core.codec`` registry (any :class:`repro.core.codec.Codec`); posting
 lists shorter than 64 fall back to Stream VByte (the byte-oriented short-list
 fast path — the paper's §7.5 VByte fallback upgraded to a separated-control
 layout that decodes branch-free).  Block-level skip pointers every 512
@@ -85,12 +86,12 @@ class InvertedIndex:
     def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
         """Decompress only the docids of one block (AND queries skip TFs)."""
         first, encg, _ = self.terms[t].blocks[bi]
-        gaps = codec_lib.get(encg.codec).decode(encg)
+        gaps = codec_lib.get(encg.codec).decode_np(encg)
         return dgap_decode_np(gaps) + np.uint32(first)
 
     def decode_block_tfs(self, t: int, bi: int) -> np.ndarray:
         _, _, enct = self.terms[t].blocks[bi]
-        return codec_lib.get(enct.codec).decode(enct)
+        return codec_lib.get(enct.codec).decode_np(enct)
 
     def decode_block(self, t: int, bi: int):
         """Decompress exactly one posting block -> (docids, tfs)."""

@@ -1,11 +1,11 @@
 """One-shot query evaluation over the compressed index (paper §7.4).
 
-AND queries: ascending-df fused decode-and-intersect (skip-table block
-pruning + the vectorized intersection kernels in ``repro.kernels.intersect``);
-OR queries: BM25 DAAT accumulation with top-k (k=10).  These helpers are
-stateless — each call runs on an uncached :class:`repro.index.engine.
-QueryEngine`.  For batched serving (many queries, shared decoded-block LRU)
-use ``QueryEngine``/``QueryBatch`` directly.
+Deprecated shims: each helper builds an uncached
+:class:`repro.index.engine.QueryEngine`, resolves an
+:class:`repro.index.engine.ExecutionPlan` for its single query, and executes
+it — results are bit-identical to planning explicitly.  For batched serving
+(many queries, shared decoded-block LRU) use ``QueryEngine.plan`` /
+``execute`` directly; see the migration note in ``repro/index/__init__.py``.
 
 ``and_query_ref`` keeps the seed scalar path (full per-term decode +
 ``np.isin``) as the correctness/throughput baseline.
@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .engine import K1, B, QueryEngine  # noqa: F401  (re-export BM25 constants)
+from .engine import K1, B, QueryBatch, QueryEngine  # noqa: F401  (re-export BM25 constants)
 from .invindex import InvertedIndex
 
 
@@ -23,16 +23,21 @@ def _engine(idx: InvertedIndex) -> QueryEngine:
     return QueryEngine(idx, cache_blocks=0, cache_score_terms=0)
 
 
+def _run_one(idx: InvertedIndex, terms: list, mode: str, k: int = 10):
+    eng = _engine(idx)
+    return eng.execute(eng.plan(QueryBatch([list(terms)], mode=mode, k=k)))[0]
+
+
 def and_query(idx: InvertedIndex, terms: list) -> np.ndarray:
-    return _engine(idx).and_query(terms)
+    return _run_one(idx, terms, "and")
 
 
 def or_query(idx: InvertedIndex, terms: list, k: int = 10):
-    return _engine(idx).or_query(terms, k)
+    return _run_one(idx, terms, "or", k)
 
 
 def and_query_scored(idx: InvertedIndex, terms: list, k: int = 10):
-    return _engine(idx).and_query_scored(terms, k)
+    return _run_one(idx, terms, "and_scored", k)
 
 
 def bm25_scores(idx: InvertedIndex, t: int):

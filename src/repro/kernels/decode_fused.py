@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -50,10 +51,32 @@ from .bitpack import LANES, _mask, auto_interpret
 
 BLOCK_ROWS = 4                       # 512 postings = 4 rows x 128 lanes
 
+# per-block bit widths round up to one of these buckets, so a single outlier
+# gap widens only its own bucket instead of the whole arena (and the kernel
+# compiles at most this many bw variants)
+BW_BUCKETS = (4, 8, 12, 16, 24, 32)
+
 
 def rows_per_block(bw: int) -> int:
     """Packed tile rows for one 512-posting block at bit width ``bw``."""
     return -(-BLOCK_ROWS * bw // 32)
+
+
+def pack_gaps(gaps: np.ndarray, bw: int) -> np.ndarray:
+    """Pack one block's d-gaps (<= 512 values, each < 2**bw) into the
+    (rows_per_block(bw), 128) uint32 tile ``_fused_kernel`` consumes: value
+    ``i`` at row ``i // 128``, lane ``i % 128``, LSB-first at width ``bw``."""
+    vals = np.zeros(BLOCK_ROWS * LANES, np.uint32)
+    vals[: len(gaps)] = gaps
+    vals = vals.reshape(BLOCK_ROWS, LANES).astype(np.uint64)
+    tile = np.zeros((rows_per_block(bw), LANES), np.uint32)
+    for r in range(BLOCK_ROWS):
+        start = r * bw
+        w, off = start // 32, start % 32
+        tile[w] |= ((vals[r] << off) & 0xFFFFFFFF).astype(np.uint32)
+        if off + bw > 32:
+            tile[w + 1] |= (vals[r] >> (32 - off)).astype(np.uint32)
+    return tile
 
 
 def _fused_kernel(slot_ref, first_ref, n_ref, tile_ref, cand_ref,

@@ -1,0 +1,137 @@
+"""Registry-wide conformance sweep for the Codec protocol v2.
+
+Every registered codec must round-trip adversarial inputs (empty, single
+value, the 2**max_bits - 1 boundary, and 512-block-boundary lengths) through
+``decode_np`` and, where declared, through the JAX (``JaxDecode``) and
+device-arena (``ArenaLayout``) entry points — and the capability
+*declarations* must match actual behavior (alias coherence, padded-width
+contracts, zero padding past ``n_valid``)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import codec
+
+RNG = np.random.default_rng(7)
+
+ALL = codec.names()
+
+
+def _cases(max_bits: int) -> dict:
+    top = 2 ** max_bits - 1
+    return {
+        "empty": np.zeros(0, np.uint32),
+        "single": np.array([7], np.uint32),
+        "single_max": np.array([top], np.uint32),
+        "max_bits_boundary": np.full(130, top, np.uint32),
+        "block_511": RNG.integers(0, 1 << 16, 511, dtype=np.int64).astype(np.uint32),
+        "block_512": RNG.integers(0, 1 << 16, 512, dtype=np.int64).astype(np.uint32),
+        "block_513": RNG.integers(0, 1 << 16, 513, dtype=np.int64).astype(np.uint32),
+    }
+
+
+def _arena_roundtrip(spec, x: np.ndarray) -> None:
+    """Decode one encoded block through the declared ArenaLayout exactly the
+    way ``repro.index.device`` does: padded fixed-shape ctrl/data slices plus
+    dynamic lengths."""
+    lay = spec.arena
+    enc = spec.encode(x)
+    ctrl = np.asarray(lay.block_ctrl(enc), lay.ctrl_dtype).reshape(-1)
+    data = np.asarray(lay.block_data(enc), np.uint32).reshape(-1)
+    # declared padded maxima actually bound the block's words
+    assert ctrl.size <= lay.ctrl_width, (spec.name, ctrl.size, lay.ctrl_width)
+    assert data.size <= lay.data_width, (spec.name, data.size, lay.data_width)
+    ctrl_p = np.zeros(lay.ctrl_width, lay.ctrl_dtype)
+    ctrl_p[: ctrl.size] = ctrl
+    data_p = np.zeros(lay.data_width, np.uint32)
+    data_p[: data.size] = data
+    out = np.asarray(lay.decode_block(jnp.asarray(ctrl_p), jnp.asarray(data_p),
+                                      jnp.int32(ctrl.size), jnp.int32(enc.n)))
+    assert out.shape == (lay.out_width,), (spec.name, out.shape)
+    np.testing.assert_array_equal(out[: enc.n], x, err_msg=f"{spec.name}/arena")
+    assert not out[enc.n:].any(), f"{spec.name}: arena decode not zero-padded"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_conformance_sweep(name):
+    spec = codec.get(name)
+    for case, x in _cases(spec.max_bits).items():
+        enc = spec.encode(x)
+        assert enc.n == len(x)
+        np.testing.assert_array_equal(spec.decode_np(enc), x,
+                                      err_msg=f"{name}/{case}/decode_np")
+        if spec.jax is not None and enc.n:
+            args = spec.jax.args(enc)
+            np.testing.assert_array_equal(np.asarray(spec.jax.vec(**args)), x,
+                                          err_msg=f"{name}/{case}/jax.vec")
+            np.testing.assert_array_equal(np.asarray(spec.jax.scalar(**args)), x,
+                                          err_msg=f"{name}/{case}/jax.scalar")
+        if spec.arena is not None and 0 < enc.n <= spec.arena.max_n:
+            _arena_roundtrip(spec, x)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_capability_declarations_match_behavior(name):
+    spec = codec.get(name)
+    # required protocol surface
+    assert spec.name == name and callable(spec.encode) and callable(spec.decode_np)
+    assert spec.category in ("bit", "byte", "word", "frame")
+    assert 1 <= spec.max_bits <= 32
+    # v1 alias coherence: the deprecated attributes mirror the capabilities
+    assert spec.decode is spec.decode_np
+    if spec.jax is None:
+        assert spec.jax_args is None
+        assert spec.decode_jax_scalar is None and spec.decode_jax_vec is None
+    else:
+        assert spec.jax_args is spec.jax.args
+        assert spec.decode_jax_scalar is spec.jax.scalar
+        assert spec.decode_jax_vec is spec.jax.vec
+    if spec.arena is not None:
+        lay = spec.arena
+        assert lay.ctrl_width > 0 and lay.data_width > 0
+        assert lay.out_width >= lay.max_n > 0
+        assert callable(lay.decode_block)
+        assert callable(lay.block_ctrl) and callable(lay.block_data)
+        assert callable(lay.supports)
+        # the declared layout accepts this codec's own encodings
+        assert lay.supports(spec.encode(np.arange(20, dtype=np.uint32)))
+
+
+def test_bp_arena_supports_guards_frame_layout():
+    """A block encoded at a frame size other than the layout's falls outside
+    the declared capability (it would decode silently wrong on the fixed
+    shapes) and must report unsupported -> host oracle fallback."""
+    from repro.core import bp128
+    x = np.arange(300, dtype=np.uint32)
+    bp = codec.get("bp128")
+    gpb = codec.get("g_packed_binary")
+    assert bp.arena.supports(bp.encode(x))
+    assert gpb.arena.supports(gpb.encode(x))
+    alien = bp128.encode(x, frame_quads=64)     # same codec name, other layout
+    assert not bp.arena.supports(alien)
+    assert not gpb.arena.supports(bp.encode(x))  # fq=32 block vs fq=128 layout
+
+
+def test_get_unknown_codec_lists_names_and_suggests():
+    with pytest.raises(KeyError) as ei:
+        codec.get("group_simpel")
+    msg = str(ei.value)
+    assert "group_simple" in msg            # nearest-name suggestion
+    assert "registered codecs:" in msg
+    for name in codec.names():
+        assert name in msg
+    with pytest.raises(KeyError):
+        codec.get("definitely_not_a_codec_xyz")
+
+
+def test_names_is_deterministically_sorted():
+    assert codec.names() == sorted(codec.names())
+    assert codec.names() == codec.names()
+    assert set(codec.names(group_only=True)) <= set(codec.names())
+    for n in codec.names(category="frame"):
+        assert codec.get(n).category == "frame"
+    # the short-list fast path and both ISSUE-3 arena graduates declare arenas
+    for n in ("stream_vbyte", "group_scheme_8-B", "group_scheme_8-IU"):
+        assert codec.get(n).arena is not None, n

@@ -1,17 +1,27 @@
 """Device/host parity for the posting arenas: batched arena decode and the
-``device=True`` engine must be bit-identical to the numpy engine across every
+device-placed engine must be bit-identical to the numpy engine across every
 registered group codec, including block-boundary (df == 512/513/1024) and
 empty-intersection edge cases; the fused decode+AND kernel must match the
 host intersection exactly; and the work-list discipline (<= 1 decode per hot
-(term, block) per batch) must hold."""
+(term, block) per batch) must hold.
+
+The native-decode sweep derives its codec list from the registry's *declared*
+arena capabilities (``codec.get(name).arena``), so a codec gaining an
+``ArenaLayout`` is parity-tested automatically — no hand-maintained list."""
 
 import numpy as np
 import pytest
 
 from repro.core import codec
-from repro.index.device import KIND_HOST, SUPPORTED, DeviceArena
-from repro.index.engine import QueryBatch, QueryEngine
-from repro.index.invindex import InvertedIndex
+from repro.index.device import DeviceArena
+from repro.index.engine import ExecutionPlan, QueryBatch, QueryEngine
+from repro.index.invindex import SHORT_CODEC, InvertedIndex
+from repro.kernels import decode_fused
+
+# every codec declaring the ArenaLayout capability decodes natively on device
+# and is swept below; the registry lint (tools/registry_lint.py) cross-checks
+# this derivation against the declarations
+ARENA_CODECS = [n for n in codec.names() if codec.get(n).arena is not None]
 
 RNG = np.random.default_rng(1234)
 N_DOCS = 1500
@@ -46,21 +56,21 @@ QUERIES = ([RNG.choice(NT, size=int(RNG.integers(2, 4)), replace=False).tolist()
 
 def _engines(name, fused=False):
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
-    return QueryEngine(idx), QueryEngine(idx, device=True, fused=fused)
+    return QueryEngine(idx), QueryEngine(idx).to_device(fused=fused)
 
 
 @pytest.mark.parametrize("name", codec.names(group_only=True))
 def test_device_engine_matches_host_engine(name):
     host, dev = _engines(name)
     want = host.execute(QueryBatch(QUERIES, mode="and"))
-    got = dev.execute(QueryBatch(QUERIES, mode="and"))
+    got = dev.execute(dev.plan(QueryBatch(QUERIES, mode="and")))
     for q, a, b in zip(QUERIES, want, got):
         np.testing.assert_array_equal(a, b, err_msg=f"{name}/and/{q}")
         assert b.dtype == np.uint32
     assert (host.execute(QueryBatch(QUERIES[:5], mode="or", k=7))
-            == dev.execute(QueryBatch(QUERIES[:5], mode="or", k=7))), name
+            == dev.execute(dev.plan(QueryBatch(QUERIES[:5], mode="or", k=7)))), name
     assert (host.execute(QueryBatch(QUERIES[:5], mode="and_scored", k=7))
-            == dev.execute(QueryBatch(QUERIES[:5], mode="and_scored", k=7))), name
+            == dev.execute(dev.plan(QueryBatch(QUERIES[:5], mode="and_scored", k=7)))), name
 
 
 @pytest.mark.parametrize("name", ["group_simple", "bp128", "g_packed_binary",
@@ -68,14 +78,15 @@ def test_device_engine_matches_host_engine(name):
 def test_fused_decode_and_matches_host_engine(name):
     host, dev = _engines(name, fused=True)
     want = host.execute(QueryBatch(QUERIES, mode="and"))
-    got = dev.execute(QueryBatch(QUERIES, mode="and"))
+    plan = dev.plan(QueryBatch(QUERIES, mode="and"))
+    assert plan.placement == "fused"
+    got = dev.execute(plan)
     for q, a, b in zip(QUERIES, want, got):
         np.testing.assert_array_equal(a, b, err_msg=f"{name}/fused/{q}")
     assert dev.arena.stats["fused_calls"] > 0   # the kernel actually ran
 
 
-@pytest.mark.parametrize("name", ["group_simple", "bp128", "stream_vbyte",
-                                  "group_scheme_8-IU"])
+@pytest.mark.parametrize("name", ARENA_CODECS)
 def test_arena_block_decode_matches_numpy_oracle(name):
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
     arena = DeviceArena.from_index(idx, build_fused=False)
@@ -85,16 +96,116 @@ def test_arena_block_decode_matches_numpy_oracle(name):
     for (t, bi, f), a in zip(entries, got):
         want = idx.decode_block_ids(t, bi) if f == 0 else idx.decode_block_tfs(t, bi)
         np.testing.assert_array_equal(a, want, err_msg=f"{name}/{t}/{bi}/{f}")
-    if name in SUPPORTED:
-        assert arena.stats["blocks_device"] > 0
-        # short lists (< 64 postings) still fall back to stream_vbyte on host
-        assert any(k == KIND_HOST for k, _ in arena._loc.values())
+    # full native coverage: the short-list codec declares an arena too, so no
+    # block of this corpus falls back to the host oracle
+    assert codec.get(SHORT_CODEC).arena is not None
+    assert arena.stats["blocks_device"] == len(entries)
+    assert arena.stats["blocks_host"] == 0
+
+
+def test_non_arena_codec_falls_back_to_host_oracle():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="varbyte")
+    arena = DeviceArena.from_index(idx, build_fused=False)
+    entries = [(t, bi, f) for t in idx.terms
+               for bi in range(idx.n_blocks(t)) for f in (0, 1)]
+    got = arena.decode_blocks(entries)
+    for (t, bi, f), a in zip(entries, got):
+        want = idx.decode_block_ids(t, bi) if f == 0 else idx.decode_block_tfs(t, bi)
+        np.testing.assert_array_equal(a, want, err_msg=f"varbyte/{t}/{bi}/{f}")
+    # varbyte declares no arena; its blocks decode on host, while the
+    # stream_vbyte short lists still go native
+    assert arena.stats["blocks_host"] > 0
+    assert arena.stats["blocks_device"] > 0
+    assert not arena.covers((4, 0, 0))       # df=512 term -> varbyte
+    assert arena.covers((0, 0, 0))           # df=12 term -> stream_vbyte
+
+
+def test_plan_resolves_placement_and_term_caps():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    host = QueryEngine(idx)
+    p = host.plan(QueryBatch(QUERIES, mode="and"))
+    assert isinstance(p, ExecutionPlan) and p.placement == "host"
+    assert 999 not in p.terms                # unknown terms omitted
+    assert p.terms[0].codec == SHORT_CODEC   # df=12 -> short-list fast path
+    assert p.terms[4].codec == "group_simple"
+    assert p.terms[4].arena and not p.terms[4].fused
+    dev = QueryEngine(idx).to_device(fused=True)
+    pf = dev.plan(QueryBatch(QUERIES, mode="and"))
+    assert pf.placement == "fused" and pf.terms[4].fused
+    # plans are snapshots: the host plan still executes on the host path and
+    # reproduces the device results exactly
+    for a, b in zip(host.execute(p), dev.execute(pf)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_execute_querybatch_shim_matches_plan_path():
+    """Acceptance: plan()/execute(plan) reproduce the deprecated
+    execute(QueryBatch) shim bit-identically on every placement."""
+    for name in ("group_simple", "stream_vbyte", "varbyte"):
+        idx = InvertedIndex.build(DOCLEN, POSTINGS, codec=name)
+        for eng in (QueryEngine(idx), QueryEngine(idx).to_device(),
+                    QueryEngine(idx).to_device(fused=True)):
+            want = eng.execute(QueryBatch(QUERIES, mode="and"))
+            got = eng.execute(eng.plan(QueryBatch(QUERIES, mode="and")))
+            for a, b in zip(want, got):
+                np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def test_plan_placement_mismatch_raises_clearly():
+    """A device/fused plan executed on an engine without the matching arenas
+    must fail with a clear error, not deep inside intersection."""
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    fused_plan = QueryEngine(idx).to_device(fused=True).plan(
+        QueryBatch(QUERIES[:2], mode="and"))
+    with pytest.raises(ValueError, match="to_device"):
+        QueryEngine(idx).execute(fused_plan)
+    with pytest.raises(ValueError, match="fused"):
+        eng = QueryEngine(idx)
+        eng.arena = idx.to_device(build_fused=False)
+        eng.arena._pk = None
+        eng.execute(fused_plan)
+    # a host plan on a device engine is fine (host path works everywhere) and
+    # stays pinned to host intersection: the fused kernel must not run
+    host_plan = QueryEngine(idx).plan(QueryBatch(QUERIES[:2], mode="and"))
+    dev = QueryEngine(idx).to_device(fused=True)
+    calls0 = dev.arena.stats["fused_calls"]
+    for a, b in zip(QueryEngine(idx).execute(host_plan), dev.execute(host_plan)):
+        np.testing.assert_array_equal(a, b)
+    assert dev.arena.stats["fused_calls"] == calls0
+    assert dev._fused          # the engine's own configuration is untouched
+
+
+def test_mismatched_bp_frame_layout_falls_back_to_host():
+    """A bp128-named block at an alien frame size is outside the declared
+    ArenaLayout (supports() says no) and must take the host oracle, exactly."""
+    from repro.core import bp128 as bp128_lib
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="bp128")
+    t = 6                                        # df=1024 -> two bp128 blocks
+    first, encg, enct = idx.terms[t].blocks[0]
+    gaps = codec.get("bp128").decode_np(encg)
+    idx.terms[t].blocks[0] = (first, bp128_lib.encode(gaps, frame_quads=64), enct)
+    arena = DeviceArena.from_index(idx, build_fused=False)
+    assert not arena.covers((t, 0, 0))           # alien layout -> host oracle
+    assert arena.covers((t, 1, 0))               # sibling block stays native
+    got = arena.decode_blocks([(t, 0, 0), (t, 1, 0)])
+    np.testing.assert_array_equal(got[0], idx.decode_block_ids(t, 0))
+    np.testing.assert_array_equal(got[1], idx.decode_block_ids(t, 1))
+    assert arena.stats["blocks_host"] == 1 and arena.stats["blocks_device"] == 1
+
+
+def test_deprecated_constructor_flags_still_work():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    with pytest.warns(DeprecationWarning):
+        legacy = QueryEngine(idx, device=True, fused=True)
+    want = QueryEngine(idx).execute(QueryBatch(QUERIES, mode="and"))
+    for a, b in zip(want, legacy.execute(QueryBatch(QUERIES, mode="and"))):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_device_worklist_decodes_each_hot_block_once():
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
-    eng = QueryEngine(idx, cache_blocks=1 << 20, device=True)
-    eng.execute(QueryBatch(QUERIES, mode="and"))
+    eng = QueryEngine(idx, cache_blocks=1 << 20).to_device()
+    eng.execute(eng.plan(QueryBatch(QUERIES, mode="and")))
     # cold eviction-free cache: every decode is a distinct hot (term, block),
     # and the hot set is counted independently of the decode counters
     hot = {k for k in eng.cache.keys() if k[1] >= 0}
@@ -105,7 +216,7 @@ def test_device_worklist_decodes_each_hot_block_once():
     assert eng.dev_stats["worklist_refs"] >= eng.dev_stats["worklist_decodes"]
     # a second pass over the same batch is fully cache-served
     before = eng.dev_stats["worklist_decodes"]
-    r1 = eng.execute(QueryBatch(QUERIES, mode="and"))
+    r1 = eng.execute(eng.plan(QueryBatch(QUERIES, mode="and")))
     assert eng.dev_stats["worklist_decodes"] == before
     r0 = QueryEngine(idx).execute(QueryBatch(QUERIES, mode="and"))
     for a, b in zip(r0, r1):
@@ -115,9 +226,9 @@ def test_device_worklist_decodes_each_hot_block_once():
 def test_device_engine_eviction_pressure_stays_exact():
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="bp128")
     host = QueryEngine(idx)
-    tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1, device=True)
+    tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1).to_device()
     want = host.execute(QueryBatch(QUERIES, mode="and"))
-    got = tiny.execute(QueryBatch(QUERIES, mode="and"))
+    got = tiny.execute(tiny.plan(QueryBatch(QUERIES, mode="and")))
     assert tiny.cache.evictions > 0
     for a, b in zip(want, got):
         np.testing.assert_array_equal(a, b)
@@ -127,8 +238,9 @@ def test_zero_posting_term_and_empty_results_on_device():
     postings = dict(POSTINGS)
     postings[99] = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))
     idx = InvertedIndex.build(DOCLEN, postings, codec="group_simple")
-    eng = QueryEngine(idx, device=True, fused=True)
-    res = eng.execute(QueryBatch([[99], [99, 0], [NT - 2, NT - 1]], mode="and"))
+    eng = QueryEngine(idx).to_device(fused=True)
+    res = eng.execute(eng.plan(QueryBatch([[99], [99, 0], [NT - 2, NT - 1]],
+                                          mode="and")))
     for r in res:
         assert len(r) == 0 and r.dtype == np.uint32 and r.flags.writeable
     assert eng.or_query([99]) == []
@@ -151,7 +263,9 @@ def test_term_concat_empty_is_frozen_and_consistent():
 
 def test_invalid_mode_raises_on_both_paths():
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
-    for eng in (QueryEngine(idx), QueryEngine(idx, device=True)):
+    for eng in (QueryEngine(idx), QueryEngine(idx).to_device()):
+        with pytest.raises(KeyError):
+            eng.plan(QueryBatch([[0, 1]], mode="And"))
         with pytest.raises(KeyError):
             eng.execute(QueryBatch([[0, 1]], mode="And"))
 
@@ -162,7 +276,7 @@ def test_fused_arena_buckets_by_block_bit_width():
     # the corpus mixes dense (df=1024) and sparse (df=64) terms, so blocks
     # must land in more than one width bucket and every block must be covered
     assert len(arena._pk) > 1
-    assert set(arena._pk) <= set(arena.FUSED_BW_BUCKETS)
+    assert set(arena._pk) <= set(decode_fused.BW_BUCKETS)
     covered = set(arena._pk_slot)
     assert covered == {(t, bi) for t in idx.terms
                        for bi in range(idx.n_blocks(t))}
@@ -174,8 +288,8 @@ def test_to_device_upgrades_unfused_arena_in_place():
     assert a1._pk is None
     a2 = idx.to_device(build_fused=True)     # cached arena gains fused tiles
     assert a2 is a1 and a1._pk is not None
-    eng = QueryEngine(idx, device=True, fused=True)
-    eng.execute(QueryBatch(QUERIES[:4], mode="and"))
+    eng = QueryEngine(idx).to_device(fused=True)
+    eng.execute(eng.plan(QueryBatch(QUERIES[:4], mode="and")))
     assert eng.arena.stats["fused_calls"] > 0
 
 

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Registry lint: fail CI if any codec breaks the Codec protocol contract.
+
+Checks, per registered codec:
+
+  1. required protocol fields are present and well-typed (name, category,
+     encode, decode_np, max_bits);
+  2. declared capabilities are structurally valid (JaxDecode's three
+     callables; ArenaLayout's positive padded widths and callables);
+  3. every declared ArenaLayout actually honors the fixed-shape contract on a
+     smoke input — padded ctrl/data slices, dynamic lengths, zero padding
+     past ``n_valid`` (the same harness the conformance tests use);
+  4. every arena capability is covered by the device/host parity sweep: the
+     sweep's codec list (``tests/test_device_arena.py::ARENA_CODECS``) must
+     be derived from the declarations, so a codec declaring an arena without
+     parity coverage (or a hand-pinned test list drifting from the registry)
+     fails here.
+
+Run: PYTHONPATH=src python tools/registry_lint.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import codec  # noqa: E402
+
+CATEGORIES = ("bit", "byte", "word", "frame")
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fail(errors: list, msg: str) -> None:
+    errors.append(msg)
+    print(f"FAIL {msg}")
+
+
+def lint_protocol(errors: list) -> None:
+    for name in codec.names():
+        spec = codec.get(name)
+        if spec.name != name:
+            _fail(errors, f"{name}: registered under mismatched name {spec.name!r}")
+        if spec.category not in CATEGORIES:
+            _fail(errors, f"{name}: category {spec.category!r} not in {CATEGORIES}")
+        if not callable(spec.encode) or not callable(spec.decode_np):
+            _fail(errors, f"{name}: encode/decode_np must be callable")
+        if not isinstance(spec.max_bits, int) or not 1 <= spec.max_bits <= 32:
+            _fail(errors, f"{name}: max_bits {spec.max_bits!r} outside 1..32")
+        if spec.jax is not None:
+            for field in ("args", "scalar", "vec"):
+                if not callable(getattr(spec.jax, field)):
+                    _fail(errors, f"{name}: JaxDecode.{field} not callable")
+        if spec.arena is not None:
+            lay = spec.arena
+            if min(lay.ctrl_width, lay.data_width, lay.out_width, lay.max_n) <= 0:
+                _fail(errors, f"{name}: ArenaLayout widths must be positive")
+            if lay.out_width < lay.max_n:
+                _fail(errors, f"{name}: out_width {lay.out_width} < max_n {lay.max_n}")
+            for field in ("decode_block", "block_ctrl", "block_data"):
+                if not callable(getattr(lay, field)):
+                    _fail(errors, f"{name}: ArenaLayout.{field} not callable")
+
+
+def _load(module: str, *relpath: str):
+    path = os.path.join(_REPO, *relpath)
+    spec = importlib.util.spec_from_file_location(module, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def lint_arena_contract(errors: list) -> None:
+    # the ONE arena round-trip harness lives in the conformance tests; lint
+    # reuses it on a smoke input so CI and pytest enforce the same contract
+    harness = _load("test_codec_protocol", "tests", "test_codec_protocol.py")
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 1 << 12, 200, dtype=np.int64).astype(np.uint32)
+    for name in codec.names():
+        spec = codec.get(name)
+        if spec.arena is None:
+            continue
+        try:
+            harness._arena_roundtrip(spec, x)
+        except AssertionError as e:
+            _fail(errors, f"{name}: arena contract violated: {e}")
+
+
+def lint_parity_coverage(errors: list) -> None:
+    mod = _load("test_device_arena", "tests", "test_device_arena.py")
+    declared = {n for n in codec.names() if codec.get(n).arena is not None}
+    covered = set(getattr(mod, "ARENA_CODECS", ()))
+    for name in sorted(declared - covered):
+        _fail(errors, f"{name}: declares an arena capability but is missing "
+                      f"from the device/host parity sweep (ARENA_CODECS)")
+    for name in sorted(covered - declared):
+        _fail(errors, f"{name}: in the parity sweep but declares no arena "
+                      f"capability")
+
+
+def main() -> int:
+    errors: list = []
+    lint_protocol(errors)
+    lint_arena_contract(errors)
+    lint_parity_coverage(errors)
+    n_arena = sum(codec.get(n).arena is not None for n in codec.names())
+    n_jax = sum(codec.get(n).jax is not None for n in codec.names())
+    print(f"registry lint: {len(codec.names())} codecs "
+          f"({n_jax} JaxDecode, {n_arena} ArenaLayout), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
