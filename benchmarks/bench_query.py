@@ -141,6 +141,26 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
          f"{refs}refs,{decodes}decodes,{hot}hot,"
          f"{decodes / max(hot, 1):.2f}per_hot_block")
 
+    # candidate residency per placement: rounds executed with candidates
+    # device-resident, and candidate downloads per query (the resident
+    # placements must show zero syncs between rounds — their only download
+    # is the one final result copy per batch, reported separately)
+    report["placements"] = {}
+    for placement in ("host", "device", "fused"):
+        eng = QueryEngine(idx)
+        if placement != "host":
+            eng.to_device(fused=placement == "fused")
+        eng.execute(eng.plan(QueryBatch(queries, mode="and")))
+        stats = {
+            "rounds_on_device": eng.dev_stats["resident_rounds"],
+            "host_syncs_per_query": eng.dev_stats["cand_syncs"] / n_queries,
+            "final_syncs": eng.dev_stats["final_syncs"],
+        }
+        report["placements"][placement] = stats
+        emit(f"query/{dataset}/{codec}/residency_{placement}", 0.0,
+             f"{stats['rounds_on_device']}rounds_on_device,"
+             f"{stats['host_syncs_per_query']:.3f}syncs_per_query")
+
     path = os.environ.get("BENCH_QUERY_JSON", "BENCH_query.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

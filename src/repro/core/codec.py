@@ -17,11 +17,16 @@ and *declares* optional capabilities:
     the jit kwargs, ``scalar(**kw)`` mirrors the paper's sequential routine,
     ``vec(**kw)`` the SIMD-vectorized one (Table VII rows).
   * :class:`ArenaLayout` — the fixed-shape device-arena contract consumed by
-    ``repro.index.device``: padded control/data/output widths for one posting
-    block plus a ``decode_block(ctrl, data, ctrl_len, n_valid)`` entry that
+    ``repro.index.device``: N named padded columns (:class:`ArenaColumn` —
+    ctrl / data / exceptions / …) for one posting block plus a
+    ``decode_block(*column_slices, *column_lens, n_valid)`` entry that
     decodes under ``vmap``/``jit`` with static shapes.  Any codec declaring
     this gets the lane-parallel batched work-list decode for free — the arena
-    builder contains no per-codec branches.
+    builder contains no per-codec or per-column-count branches.  The
+    2-column (ctrl, data) form every pre-exception codec uses is the
+    :meth:`ArenaLayout.two_column` alias, so those codecs register
+    unchanged; exception-bearing codecs (the Group-PFD family) declare a
+    third ``exceptions`` column and patch inside ``decode_block``.
 
 The v1 ``CodecSpec`` attribute surface (``decode``, ``jax_args``,
 ``decode_jax_scalar``, ``decode_jax_vec``) is kept as read-only aliases so
@@ -74,24 +79,41 @@ def _supports_default(enc: Encoded) -> bool:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArenaColumn:
+    """One named padded stream of an :class:`ArenaLayout`.
+
+    name: column role — ``"ctrl"``, ``"data"``, ``"exceptions"``, … (the
+        registry lint keys the exception-consistency check off this name).
+    width: padded per-block maximum (flat words) — slack past a block's own
+        words may contain the *next* block's words, so ``decode_block`` must
+        mask everything past the column's dynamic length.
+    extract(enc): pull one encoded block's words for this column (host side,
+        at arena build time).
+    dtype: the arena array dtype this column is stored as.
+    """
+
+    name: str
+    width: int
+    extract: Callable[[Encoded], np.ndarray] = _block_data_default
+    dtype: Any = np.uint32
+
+
+@dataclasses.dataclass(frozen=True)
 class ArenaLayout:
     """Fixed-shape device-arena contract for one posting block.
 
-    The device arena concatenates every block's control words into one
-    ``ctrl_dtype`` device array and every block's data words into one uint32
-    device array, then decodes a work-list lane-parallel: each lane gathers a
-    padded ``(ctrl_width,)`` / ``(data_width,)`` slice (``dynamic_slice``
-    under ``vmap``) and calls ``decode_block``.
+    The device arena concatenates, per declared column, every block's words
+    into one contiguous device array of that column's dtype, then decodes a
+    work-list lane-parallel: each lane gathers one padded ``(width,)`` slice
+    per column (``dynamic_slice`` under ``vmap``) and calls ``decode_block``.
 
-    ctrl_width / data_width: padded per-block maxima (flat words) — slack past
-        a block's own words may contain the *next* block's words, so
-        ``decode_block`` must mask everything past ``ctrl_len`` / ``n_valid``.
+    columns: the declared :class:`ArenaColumn` streams, in ``decode_block``
+        argument order.  Pre-exception codecs declare (ctrl, data); the
+        Group-PFD family adds an ``exceptions`` column for its patch stream.
     out_width: static length of ``decode_block``'s result (zero-padded past
         ``n_valid``).
-    decode_block(ctrl, data, ctrl_len, n_valid) -> uint32[out_width]: jit/vmap
-        traceable, static shapes, dynamic lengths.
-    block_ctrl / block_data: extract one encoded block's control/data words
-        (host side, at arena build time).
+    decode_block(*column_slices, *column_lens, n_valid) -> uint32[out_width]:
+        jit/vmap traceable, static shapes, dynamic per-column word counts.
     supports(enc): per-block eligibility — a block whose encoding does not
         match this fixed layout (e.g. a BP frame size other than the one the
         layout was declared for) falls back to the host oracle instead of
@@ -99,15 +121,64 @@ class ArenaLayout:
     max_n: largest block the widths are sized for (the index block size).
     """
 
-    ctrl_width: int
-    data_width: int
+    columns: tuple
     out_width: int
     decode_block: Callable[..., Any]
-    block_ctrl: Callable[[Encoded], np.ndarray] = _block_ctrl_default
-    block_data: Callable[[Encoded], np.ndarray] = _block_data_default
     supports: Callable[[Encoded], bool] = _supports_default
-    ctrl_dtype: Any = np.int32
     max_n: int = ARENA_BLOCK
+
+    @classmethod
+    def two_column(cls, ctrl_width: int, data_width: int, out_width: int,
+                   decode_block: Callable[..., Any],
+                   block_ctrl: Callable[[Encoded], np.ndarray] = _block_ctrl_default,
+                   block_data: Callable[[Encoded], np.ndarray] = _block_data_default,
+                   supports: Callable[[Encoded], bool] = _supports_default,
+                   ctrl_dtype: Any = np.int32,
+                   max_n: int = ARENA_BLOCK) -> "ArenaLayout":
+        """Thin alias for the original (ctrl, data) form: ``decode_block``
+        keeps its v2 ``(ctrl, data, ctrl_len, n_valid)`` signature and the
+        codec registers unchanged."""
+        return cls(
+            columns=(ArenaColumn("ctrl", ctrl_width, block_ctrl, ctrl_dtype),
+                     ArenaColumn("data", data_width, block_data, np.uint32)),
+            out_width=out_width,
+            decode_block=_adapt_two_column(decode_block),
+            supports=supports, max_n=max_n)
+
+    # ---- 2-column aliases (the pre-column attribute surface) --------------- #
+
+    @property
+    def ctrl_width(self) -> int:
+        return self.columns[0].width
+
+    @property
+    def data_width(self) -> int:
+        return self.columns[1].width
+
+    @property
+    def ctrl_dtype(self) -> Any:
+        return self.columns[0].dtype
+
+    @property
+    def block_ctrl(self) -> Callable[[Encoded], np.ndarray]:
+        return self.columns[0].extract
+
+    @property
+    def block_data(self) -> Callable[[Encoded], np.ndarray]:
+        return self.columns[1].extract
+
+
+def _adapt_two_column(fn: Callable[..., Any]) -> Callable[..., Any]:
+    """Bind a legacy ``(ctrl, data, ctrl_len, n_valid)`` decoder to the
+    generic N-column ``(*slices, *lens, n_valid)`` contract (the data
+    column's dynamic length was never consumed by the 2-column codecs).
+    Created once per layout at registration, so its identity is stable for
+    the arena's jit cache."""
+
+    def decode(ctrl, data, ctrl_len, data_len, n_valid):
+        return fn(ctrl, data, ctrl_len, n_valid)
+
+    return decode
 
 
 # --------------------------------------------------------------------------- #
@@ -199,7 +270,7 @@ def _gs_decode_block(ctrl, data, ctrl_len, n_valid):
                                            ctrl_len, n_valid)
 
 
-_GS_ARENA = ArenaLayout(
+_GS_ARENA = ArenaLayout.two_column(
     ctrl_width=_GS_PMAX, data_width=4 * _GS_PMAX, out_width=ARENA_BLOCK,
     decode_block=_gs_decode_block, block_ctrl=_gs_block_ctrl)
 
@@ -223,7 +294,7 @@ def _bp_supports(enc: Encoded, *, frame_quads) -> bool:
 
 
 def _bp_arena(frame_quads: int) -> ArenaLayout:
-    return ArenaLayout(
+    return ArenaLayout.two_column(
         ctrl_width=-(-_BP_WMAX // frame_quads),
         data_width=4 * (_BP_WMAX + 2),
         out_width=ARENA_BLOCK,
@@ -238,7 +309,7 @@ def _svb_block_data(enc: Encoded) -> np.ndarray:
     return np.asarray(enc.data, np.uint32)
 
 
-_SVB_ARENA = ArenaLayout(
+_SVB_ARENA = ArenaLayout.two_column(
     ctrl_width=ARENA_BLOCK // 4,               # one control byte per quadruple
     data_width=4 * ARENA_BLOCK + 4,            # worst-case payload + gather slack
     out_width=ARENA_BLOCK,
@@ -249,7 +320,7 @@ _SVB_ARENA = ArenaLayout(
 
 
 def _gsch_arena(variant: str) -> ArenaLayout:
-    return ArenaLayout(
+    return ArenaLayout.two_column(
         ctrl_width=group_scheme.arena_ctrl_width(variant),
         data_width=4 * (ARENA_BLOCK // 4 + 2),
         out_width=ARENA_BLOCK,
@@ -257,6 +328,37 @@ def _gsch_arena(variant: str) -> ArenaLayout:
                                        variant=variant),
         block_ctrl=group_scheme.arena_block_ctrl,
         ctrl_dtype=np.uint32)
+
+
+# ---- frame-family layouts (AFOR / VSE / PFD): shared vertical data stream -- #
+
+_FR_WMAX = ARENA_BLOCK // 4        # max data words per component per block
+_FR_DATA = 4 * (_FR_WMAX + 2)      # flat words incl. the unpack slack rows
+
+
+def _ctrl_col(width: int) -> ArenaColumn:
+    return ArenaColumn("ctrl", width, _block_ctrl_default, np.int32)
+
+
+_AFOR_ARENA = ArenaLayout(
+    columns=(_ctrl_col(group_afor.ARENA_F), ArenaColumn("data", _FR_DATA)),
+    out_width=ARENA_BLOCK, decode_block=group_afor.decode_arena_block)
+
+_VSE_ARENA = ArenaLayout(
+    columns=(_ctrl_col(2 * group_vse.ARENA_F), ArenaColumn("data", _FR_DATA)),
+    out_width=ARENA_BLOCK, decode_block=group_vse.decode_arena_block)
+
+
+def _pfd_block_exc(enc: Encoded) -> np.ndarray:
+    exc = enc.exceptions
+    return np.zeros(0, np.uint32) if exc is None else np.asarray(exc, np.uint32)
+
+
+_PFD_ARENA = ArenaLayout(
+    columns=(_ctrl_col(2 * group_pfd.ARENA_F), ArenaColumn("data", _FR_DATA),
+             ArenaColumn("exceptions", group_pfd.ARENA_EXC_WORDS + 2,
+                         _pfd_block_exc)),
+    out_width=ARENA_BLOCK, decode_block=group_pfd.decode_arena_block)
 
 
 # --------------------------------------------------------------------------- #
@@ -306,20 +408,24 @@ for _v in group_scheme.VARIANTS:
 register(Codec("group_afor", "frame", group_afor.encode, group_afor.decode_np,
                is_group=True,
                jax=JaxDecode(group_afor.jax_args, group_afor.decode_jax_scalar,
-                             group_afor.decode_jax_vec)))
+                             group_afor.decode_jax_vec),
+               arena=_AFOR_ARENA))
 register(Codec("group_vse", "frame", group_vse.encode, group_vse.decode_np,
                is_group=True,
                jax=JaxDecode(group_vse.jax_args, group_vse.decode_jax_scalar,
-                             group_vse.decode_jax_vec)))
+                             group_vse.decode_jax_vec),
+               arena=_VSE_ARENA))
 register(Codec("group_pfd", "frame", group_pfd.encode, group_pfd.decode_np,
                is_group=True,
                jax=JaxDecode(group_pfd.jax_args, group_pfd.decode_jax_scalar,
-                             group_pfd.decode_jax_vec)))
+                             group_pfd.decode_jax_vec),
+               arena=_PFD_ARENA))
 register(Codec("group_optpfd", "frame",
                functools.partial(group_pfd.encode, opt=True),
                group_pfd.decode_np, is_group=True,
                jax=JaxDecode(group_pfd.jax_args, group_pfd.decode_jax_scalar,
-                             group_pfd.decode_jax_vec)))
+                             group_pfd.decode_jax_vec),
+               arena=_PFD_ARENA))       # same block format -> shared layout
 register(Codec("bp128", "frame", bp128.encode, bp128.decode_np, is_group=True,
                jax=JaxDecode(bp128.jax_args, bp128.decode_jax_scalar,
                              bp128.decode_jax_vec),

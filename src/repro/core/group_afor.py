@@ -22,6 +22,11 @@ from .layout import quadmax_np
 SIZES_Q = np.array([8, 16, 32])          # frame sizes in quadruples
 HEADER_BITS = 8
 
+# device-arena geometry: one 512-posting index block is at most ARENA_Q
+# quadruples, partitioned into frames of >= SIZES_Q.min() quads each
+ARENA_Q = 128
+ARENA_F = ARENA_Q // 8
+
 
 def _partition(qm_ebw: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """DP partition -> (sizes_in_quads, bw) per frame."""
@@ -125,3 +130,33 @@ def decode_jax_vec(control, data, n: int, q: int):
 @functools.partial(jax.jit, static_argnames=("n", "q"))
 def decode_jax_scalar(control, data, n: int, q: int):
     return unpack_data_scalar_jnp(data, _bw_quads(control, q), n, q)
+
+
+def decode_arena_block(ctrl, data, ctrl_len, data_len, n_valid):
+    """Fixed-shape single-block decode for the device arena
+    (``repro.index.device``): padded static shapes + dynamic lengths, so a
+    work-list of (term, block) pairs decodes lane-parallel under ``vmap``.
+
+    ctrl:  (ARENA_F,) int32 frame headers (2-bit size code | 6-bit bw); rows
+           >= ``ctrl_len`` are arena slack and are masked out.
+    data:  (4 * (W + 2),) flat uint32 words gathered from the data arena
+           (trailing slack rows feed only bw=0 quads / masked reads).
+    ctrl_len, data_len, n_valid: dynamic word / integer counts of this block.
+    Returns (4 * ARENA_Q,) uint32 values, zero beyond ``n_valid``.
+    """
+    fmax = ctrl.shape[0]
+    f_valid = jnp.arange(fmax, dtype=jnp.int32) < ctrl_len
+    sizes = jnp.where(f_valid, SIZES_J[ctrl & 3], 0)
+    bws = (ctrl >> 2).astype(jnp.int32)
+    starts = jnp.cumsum(sizes) - sizes
+    # per-quad frame id via boundary marks (the group_simple arena idiom):
+    # frames are >= 8 quads so valid starts are strictly increasing
+    marks = jnp.zeros(ARENA_Q, jnp.int32).at[
+        jnp.where(f_valid, starts, ARENA_Q)].add(1, mode="drop")
+    fid = jnp.clip(jnp.cumsum(marks) - 1, 0, fmax - 1)
+    q = jnp.arange(ARENA_Q, dtype=jnp.int32)
+    q_len = (n_valid + 3) >> 2
+    bw_quads = jnp.where(q < q_len, bws[fid], 0)
+    out = unpack_data_jnp(data.reshape(-1, 4), bw_quads, 4 * ARENA_Q)
+    i = jnp.arange(4 * ARENA_Q, dtype=jnp.int32)
+    return jnp.where(i < n_valid, out, 0)

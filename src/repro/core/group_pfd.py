@@ -29,6 +29,14 @@ FRAME_INTS = 128
 ZETA = 0.10
 W_CHOICES = np.array([8, 16, 32], np.int32)
 
+# device-arena geometry: one 512-posting index block is at most ARENA_Q quads
+# = ARENA_F fixed frames; every one of its <= 512 integers may be an
+# exception, and an exception costs at most 8 + 32 bits in the patch stream
+ARENA_Q = 128
+ARENA_F = ARENA_Q // FRAME_QUADS
+ARENA_EXC = 4 * ARENA_Q
+ARENA_EXC_WORDS = ARENA_EXC * (8 + 32) // 32
+
 
 def encode(x: np.ndarray, zeta: float = ZETA, opt: bool = False) -> Encoded:
     """opt=False: paper-faithful zeta rule on the quad max array (§6.2 Step 2).
@@ -188,3 +196,52 @@ def decode_jax_scalar(control, data, exceptions, n: int, q: int, total_exc: int)
     bw_quads = jnp.repeat(bws, FRAME_QUADS, total_repeat_length=max(q, 1))
     out = unpack_data_scalar_jnp(data, bw_quads, n, q)
     return _apply_exceptions(out, control, exceptions, n, total_exc)
+
+
+W_J = jnp.asarray(W_CHOICES)
+
+
+def decode_arena_block(ctrl, data, exc, ctrl_len, data_len, exc_len, n_valid):
+    """Fixed-shape single-block decode + vectorized exception patch for the
+    device arena (``repro.index.device``): padded static shapes + dynamic
+    lengths, so a work-list of (term, block) pairs decodes lane-parallel
+    under ``vmap`` — the patch application never leaves the device.
+
+    ctrl: (2 * ARENA_F,) int32 header bytes, interleaved (bw | wcode << 6,
+          n_exc) per 128-integer frame; bytes >= ``ctrl_len`` are slack.
+    data: (4 * (W + 2),) flat uint32 words gathered from the data arena.
+    exc:  (ARENA_EXC_WORDS + 2,) uint32 patch-stream words; per frame,
+          ``n_exc`` 8-bit positions then ``n_exc`` w-bit values.
+    ctrl_len, data_len, exc_len, n_valid: dynamic word / integer counts.
+    Returns (4 * ARENA_Q,) uint32 values, zero beyond ``n_valid``.
+
+    Shared by ``group_pfd`` and ``group_optpfd`` (identical block format).
+    """
+    c = ctrl.reshape(-1, 2)
+    fmax = c.shape[0]
+    f_valid = jnp.arange(fmax, dtype=jnp.int32) < (ctrl_len >> 1)
+    bws = jnp.where(f_valid, c[:, 0] & 63, 0).astype(jnp.int32)
+    ws = W_J[c[:, 0] >> 6]
+    n_exc = jnp.where(f_valid, c[:, 1], 0).astype(jnp.int32)
+    q = jnp.arange(ARENA_Q, dtype=jnp.int32)
+    q_len = (n_valid + 3) >> 2
+    bw_quads = jnp.where(q < q_len, bws[jnp.minimum(q >> 5, fmax - 1)], 0)
+    out = unpack_data_jnp(data.reshape(-1, 4), bw_quads, 4 * ARENA_Q)
+    # vectorized patch: one fixed lane per potential exception slot, masked
+    # past the block's dynamic total (same bit layout as _apply_exceptions)
+    frame_bits = n_exc * (8 + ws)
+    base = jnp.cumsum(frame_bits) - frame_bits
+    cum = jnp.cumsum(n_exc)
+    j = jnp.arange(ARENA_EXC, dtype=jnp.int32)
+    fid = jnp.minimum(jnp.searchsorted(cum, j, side="right").astype(jnp.int32),
+                      fmax - 1)
+    jj = j - (cum[fid] - n_exc[fid])
+    pos = gather_bits_jnp(exc, base[fid] + jj * 8,
+                          jnp.full(ARENA_EXC, 8, jnp.int32))
+    vals = gather_bits_jnp(exc, base[fid] + n_exc[fid] * 8 + jj * ws[fid],
+                           ws[fid])
+    g = fid * FRAME_INTS + pos.astype(jnp.int32)
+    g = jnp.where((j < cum[-1]) & (g < n_valid), g, out.shape[0])
+    out = out.at[g].set(vals, mode="drop")
+    i = jnp.arange(4 * ARENA_Q, dtype=jnp.int32)
+    return jnp.where(i < n_valid, out, 0)

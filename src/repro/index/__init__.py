@@ -10,18 +10,22 @@ Layers (bottom up):
     over single-query plans).
   * ``engine`` — the batched query engine: ``engine.plan(batch)`` resolves a
     ``QueryBatch`` into a typed ``ExecutionPlan`` — placement (host / device
-    / fused) plus every referenced term's codec capabilities, read once from
-    the registry — and ``engine.execute(plan)`` runs it: AND queries fuse
-    skip-table block pruning with the vectorized intersection kernels
+    / fused, with batches of <= ``HOST_BATCH_MAX`` queries auto-placed on
+    the host, recorded in the plan's ``note``) plus every referenced term's
+    codec capabilities, read once from the registry — and
+    ``engine.execute(plan)`` runs it: AND queries fuse skip-table block
+    pruning with the vectorized intersection kernels
     (``repro.kernels.intersect``), and hot decoded blocks live in an LRU
     keyed by (term, block) so a batch decodes each block at most once.
   * ``device`` — device-resident posting arenas, built *generically* from
     each codec's declared ``ArenaLayout``: the compressed blocks flattened
-    into contiguous per-codec device arrays with per-(term, block)
+    into contiguous per-declared-column device arrays with per-(term, block)
     offset/length/first-docid tables.  ``engine.to_device()`` switches the
     serving path onto batched lane-parallel work-list decodes (one jitted
-    call per codec per AND round, deduped across the batch) and optionally
-    the fused decode+bitmap-AND Pallas kernel (``repro.kernels.decode_fused``).
+    call per codec per AND round, deduped across the batch); AND candidates
+    then stay in a device-resident segmented bitmap across rounds
+    (``repro.kernels.intersect_rounds`` — only the final result is copied to
+    host), optionally through the segmented fused decode+probe Pallas kernel.
 
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a
@@ -30,13 +34,29 @@ and ``decode_np(Encoded) -> np.uint32[N]`` and register a
 
   * add a ``JaxDecode(args, scalar, vec)`` capability and the codec joins the
     scalar-vs-SIMD decode benchmarks and differential tests;
-  * add an ``ArenaLayout`` (padded control/data/output widths for one
-    512-posting block + a fixed-shape ``decode_block(ctrl, data, ctrl_len,
-    n_valid)``) and the codec's blocks decode natively in the device arena's
-    batched work-lists — the arena, engine, parity tests
+  * add an ``ArenaLayout`` (named padded ``ArenaColumn`` streams for one
+    512-posting block + a fixed-shape ``decode_block(*column_slices,
+    *column_lens, n_valid)``) and the codec's blocks decode natively in the
+    device arena's batched work-lists — the arena, engine, parity tests
     (``tests/test_device_arena.py`` derives its sweep from the declarations),
     and the CI registry lint (``tools/registry_lint.py``) pick it up with no
-    engine edits.
+    engine edits.  Most codecs need only the classic (ctrl, data) pair —
+    declare it with the ``ArenaLayout.two_column(...)`` alias and a
+    ``decode_block(ctrl, data, ctrl_len, n_valid)``.
+
+Exception columns: a codec whose encoder patches outliers through a separate
+stream (non-empty ``Encoded.exceptions`` — the Group-PFD family) must declare
+a third column named ``"exceptions"`` whose ``extract`` pulls the patch
+words, and apply the patch *inside* ``decode_block`` (see
+``repro/core/group_pfd.py::decode_arena_block``: unpack the low bits, then a
+fixed-lane vectorized ``gather_bits`` + masked scatter of (position, value)
+pairs — one lane per potential exception, masked past the block's dynamic
+total, so the patch never leaves the device).  Width the column for the worst
+case the encoder can emit (``group_pfd.ARENA_EXC_WORDS``: every integer an
+exception at the widest value width).  The registry lint round-trips a
+heavy-tailed probe through every arena codec and fails any that stores
+exceptions without declaring such a column, so a forgotten column is caught
+in CI rather than as silently-unpatched decodes.
 
 Migration note (deprecated v1 surface, kept as delegating shims):
 

@@ -8,15 +8,17 @@ round the engine pays O(selected blocks) interpreter iterations.  A
 ``DeviceArena`` flattens the whole index once at build time — and it does so
 *generically*: any codec whose registry entry declares an
 :class:`repro.core.codec.ArenaLayout` capability participates, with zero
-codec-name dispatch in this module.  Per declared layout the arena holds:
+codec-name (or column-count) dispatch in this module.  Per declared layout
+the arena holds:
 
-  * **control arena** — every block's control words (selectors / bit widths /
-    control bytes, per the codec's own layout), concatenated into one device
-    array of the layout's ``ctrl_dtype``.
-  * **data arena** — the matching data words as one uint32 device array (ids
-    and TFs are separate entries of the same arena).
-  * **tables** — per-entry control offset/length, data offset, posting count
-    and first-docid (skip-table) columns, so any (term, block, field) is
+  * **one arena per declared column** — every block's words for that column
+    (ctrl / data / exceptions / …, per the codec's own
+    :class:`repro.core.codec.ArenaColumn` declarations), concatenated into
+    one device array of the column's dtype.  Exception-bearing codecs (the
+    Group-PFD family) are therefore first-class: their patch streams live in
+    a third column and are applied inside the fixed-shape ``decode_block``.
+  * **tables** — per-entry per-column offset/length plus posting count and
+    first-docid (skip-table) columns, so any (term, block, field) is
     addressable on device by a handful of integers.
 
 On top sit two batched execution paths:
@@ -50,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.core.bits import ebw_np
-from repro.kernels import decode_fused
+from repro.kernels import decode_fused, intersect_rounds
 from repro.kernels.bitpack import LANES
 from repro.kernels.intersect import bitmap_build_np
 
@@ -76,86 +78,103 @@ def _pad_rows(cols: list[np.ndarray], w: int) -> list[jnp.ndarray]:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("decode", "cw", "dw"))
-def _decode_worklist(ctrl_arena, data_arena, ctrl_off, ctrl_len, dat_off, n,
-                     first, is_delta, *, decode, cw, dw):
-    """Work-list decode over one codec's arenas, one lane per block.
+@functools.partial(jax.jit, static_argnames=("decode", "widths"))
+def _decode_worklist(arenas, offs, lens, n, first, is_delta, *, decode, widths):
+    """Work-list decode over one codec's column arenas, one lane per block.
 
-    ``decode`` is the codec's declared ``ArenaLayout.decode_block`` — a
-    stable registry object, so the jit cache stays bounded by the number of
-    registered arena layouts times the work-list buckets.
+    ``arenas`` / ``offs`` / ``lens`` are tuples with one element per declared
+    column; each lane gathers one padded fixed-width slice per column and
+    calls ``decode(*slices, *lens, n_valid)``.  ``decode`` is the codec's
+    declared ``ArenaLayout.decode_block`` — a stable registry object, so the
+    jit cache stays bounded by the number of registered arena layouts times
+    the work-list buckets.
     """
 
-    def one(co, cl, do, nn, fi, dl):
-        ctrl = jax.lax.dynamic_slice(ctrl_arena, (co,), (cw,))
-        data = jax.lax.dynamic_slice(data_arena, (do,), (dw,))
-        vals = decode(ctrl, data, cl, nn)
+    def one(off, ln, nn, fi, dl):
+        cols = tuple(jax.lax.dynamic_slice(a, (o,), (w,))
+                     for a, o, w in zip(arenas, off, widths))
+        vals = decode(*cols, *ln, nn)
         ids = jnp.cumsum(vals, dtype=jnp.uint32) + fi
         i = jnp.arange(vals.shape[0], dtype=jnp.int32)
         return jnp.where(dl, jnp.where(i < nn, ids, 0), vals)
 
-    return jax.vmap(one)(ctrl_off, ctrl_len, dat_off, n, first, is_delta)
+    return jax.vmap(one)(offs, lens, n, first, is_delta)
 
 
 class _ArenaGroup:
-    """Contiguous control/data arenas + per-entry tables for one codec."""
+    """Per-codec contiguous column arenas + per-entry tables, built from the
+    codec's declared :class:`repro.core.codec.ArenaColumn` tuple — two
+    columns or five, the group never branches on the count."""
 
     def __init__(self, name: str, layout):
         self.name = name
         self.layout = layout
-        self._ctrl_parts: list = []
-        self._data_parts: list = []
-        self.tab: dict = {k: [] for k in ("ctrl_off", "ctrl_len", "dat_off",
-                                          "n", "first")}
-        self._co = self._do = 0
+        k = len(layout.columns)
+        self._parts: list = [[] for _ in range(k)]
+        self._off = [0] * k
+        self.offs: list = [[] for _ in range(k)]
+        self.lens: list = [[] for _ in range(k)]
+        self.tab: dict = {"n": [], "first": []}
 
     def add(self, enc, first: int) -> int:
         lay = self.layout
         assert enc.n <= lay.max_n, (self.name, enc.n)
-        ctrl = np.asarray(lay.block_ctrl(enc), lay.ctrl_dtype).reshape(-1)
-        data = np.asarray(lay.block_data(enc), np.uint32).reshape(-1)
-        assert ctrl.size <= lay.ctrl_width and data.size <= lay.data_width, \
-            (self.name, ctrl.size, data.size)
         slot = len(self.tab["n"])
-        self.tab["ctrl_off"].append(self._co)
-        self.tab["ctrl_len"].append(ctrl.size)
-        self.tab["dat_off"].append(self._do)
+        for c, col in enumerate(lay.columns):
+            w = np.asarray(col.extract(enc), col.dtype).reshape(-1)
+            assert w.size <= col.width, (self.name, col.name, w.size, col.width)
+            self._parts[c].append(w)
+            self.offs[c].append(self._off[c])
+            self.lens[c].append(w.size)
+            self._off[c] += w.size
         self.tab["n"].append(enc.n)
         self.tab["first"].append(first)
-        self._ctrl_parts.append(ctrl)
-        self._data_parts.append(data)
-        self._co += ctrl.size
-        self._do += data.size
         return slot
 
     def finalize(self) -> "_ArenaGroup":
-        lay = self.layout
         # trailing slack so the fixed-size dynamic_slice gathers never clamp
-        self.ctrl = jnp.asarray(np.concatenate(
-            self._ctrl_parts + [np.zeros(lay.ctrl_width, lay.ctrl_dtype)]))
-        self.data = jnp.asarray(np.concatenate(
-            self._data_parts + [np.zeros(lay.data_width, np.uint32)]))
+        self.arenas = tuple(
+            jnp.asarray(np.concatenate(parts + [np.zeros(col.width, col.dtype)]))
+            for parts, col in zip(self._parts, self.layout.columns))
+        self.offs = [np.asarray(o, np.int32) for o in self.offs]
+        self.lens = [np.asarray(v, np.int32) for v in self.lens]
         self.tab = {k: np.asarray(v, np.uint32 if k == "first" else np.int32)
                     for k, v in self.tab.items()}
-        self._ctrl_parts = self._data_parts = None
+        self._parts = None
         return self
+
+    def _run(self, slots: np.ndarray, delta: np.ndarray):
+        """One jitted lane-parallel decode of ``slots``; returns the padded
+        (bucket, out_width) device array (rows with delta get the d-gap
+        prefix sum + first docid fused in, zero past their n)."""
+        w = _bucket(len(slots))
+        ns = self.tab["n"][slots]
+        offs = _pad_rows([o[slots] for o in self.offs], w)
+        lens = _pad_rows([v[slots] for v in self.lens], w)
+        rest = _pad_rows([ns, self.tab["first"][slots], delta], w)
+        return _decode_worklist(
+            self.arenas, tuple(offs), tuple(lens), *rest,
+            decode=self.layout.decode_block,
+            widths=tuple(col.width for col in self.layout.columns)), ns
 
     def decode(self, items: list, out: list) -> None:
         """Decode [(out_index, slot, (t, bi, field)), ...] in one jitted call;
         field 0 entries get the d-gap prefix sum + first docid fused in."""
         slots = np.asarray([slot for _, slot, _ in items], np.int64)
-        w = _bucket(len(items))
-        ns = self.tab["n"][slots]
         delta = np.asarray([e[2] == 0 for _, _, e in items])
-        cols = _pad_rows([self.tab["ctrl_off"][slots],
-                          self.tab["ctrl_len"][slots],
-                          self.tab["dat_off"][slots], ns,
-                          self.tab["first"][slots], delta], w)
-        res = np.asarray(_decode_worklist(
-            self.ctrl, self.data, *cols, decode=self.layout.decode_block,
-            cw=self.layout.ctrl_width, dw=self.layout.data_width))
+        res, ns = self._run(slots, delta)
+        res = np.asarray(res)
         for row, ((j, _, _), n) in enumerate(zip(items, ns)):
             out[j] = res[row, :n].copy()
+
+    def decode_rows(self, slots: np.ndarray):
+        """Device-resident decode: padded (bucket, out_width) docid rows
+        (prefix sum + first fused, zero past n) kept on device, plus per-slot
+        posting counts.  The round-resident engine consumes the rows without
+        any host copy."""
+        res, ns = self._run(np.asarray(slots, np.int64),
+                            np.ones(len(slots), bool))
+        return res, ns
 
 
 class DeviceArena:
@@ -213,8 +232,8 @@ class DeviceArena:
         idx = self.idx
         self._pk = {}
         self._pk_slot = {}
-        cw = -(-self.n_docs // 32)
-        self._cand_rows = max(1, -(-cw // LANES))
+        # one source of truth with the engine's segmented-bitmap geometry
+        self._cand_rows = intersect_rounds.bitmap_geometry(self.n_docs)[1]
         staged: dict = {bw: [] for bw in decode_fused.BW_BUCKETS}
         for t, tp in idx.terms.items():
             for bi in range(len(tp.blocks)):
@@ -279,6 +298,47 @@ class DeviceArena:
             self.stats["blocks_host"] += 1
         return out
 
+    def decode_blocks_device(self, entries: list):
+        """Decode a work-list of (term, block) docid entries WITHOUT copying
+        the results to the host: returns (rows, ns) where ``rows[j]`` is a
+        padded (ARENA_BLOCK,) device array of absolute docids (d-gap prefix
+        sum + first fused, zero past ``ns[j]``).  One jitted call per codec
+        present; blocks without an arena capability decode through the numpy
+        oracle and are *uploaded* in one batch — postings may flow host ->
+        device here, but candidates never flow back.
+        """
+        rows: list = [None] * len(entries)
+        ns: list = [0] * len(entries)
+        by_codec: dict = {}
+        host: list = []
+        for j, (t, bi) in enumerate(entries):
+            name, slot = self._loc[(t, bi, 0)]
+            if name is None:
+                host.append((j, t, bi))
+            else:
+                by_codec.setdefault(name, []).append((j, slot))
+        for name, items in by_codec.items():
+            g = self._groups[name]
+            res, n_arr = g.decode_rows(np.asarray([s for _, s in items]))
+            if res.shape[1] != codec_lib.ARENA_BLOCK:       # defensive: all
+                res = res[:, :codec_lib.ARENA_BLOCK]        # layouts use 512
+            for r, ((j, _), n) in enumerate(zip(items, n_arr)):
+                rows[j] = res[r]
+                ns[j] = int(n)
+            self.stats["device_calls"] += 1
+            self.stats["blocks_device"] += len(items)
+        if host:
+            batch = np.zeros((len(host), codec_lib.ARENA_BLOCK), np.uint32)
+            for k, (j, t, bi) in enumerate(host):
+                ids = self.idx.decode_block_ids(t, bi)
+                batch[k, :len(ids)] = ids
+                ns[j] = len(ids)
+            up = jnp.asarray(batch)
+            for k, (j, _, _) in enumerate(host):
+                rows[j] = up[k]
+            self.stats["blocks_host"] += len(host)
+        return rows, ns
+
     # ---- fused decode + AND ------------------------------------------------ #
 
     def has_fused(self, t, blocks) -> bool:
@@ -320,3 +380,47 @@ class DeviceArena:
             self.stats["fused_calls"] += 1
             self.stats["fused_blocks"] += len(items)
         return np.concatenate(parts)
+
+    def fused_round(self, pairs: list, cand_tiles):
+        """Segmented fused decode + probe for one device-resident AND round.
+
+        pairs: [(qslot, t, bi), ...] — this round's work-list, every entry
+            probing its own query's candidate tile block.
+        cand_tiles: (Q * _cand_rows, 128) uint32 — the segmented bitmap.
+
+        One ``kernels/intersect_rounds.segmented_decode_and`` call per
+        bit-width bucket present; returns (ids, hits, qslots) device/host
+        arrays of matching leading length, ready for the survivor scatter.
+        The decoded ids and hit masks never touch the host.
+        """
+        groups: dict = {}
+        for qs, t, bi in pairs:
+            bw, row = self._pk_slot[(t, int(bi))]
+            groups.setdefault(bw, []).append((qs, row))
+        ids_parts, hit_parts, qs_parts = [], [], []
+        for bw, items in groups.items():
+            pk = self._pk[bw]
+            rows = np.asarray([r for _, r in items], np.int64)
+            slots = rows.astype(np.int32)
+            qs = np.asarray([q for q, _ in items], np.int32)
+            firsts = pk["first"][rows]
+            ns = pk["n"][rows]
+            w = _bucket(len(items))
+            if len(items) < w:   # pad: repeated entries with n=0 hit nothing
+                pad = w - len(items)
+                slots = np.concatenate([slots, np.repeat(slots[:1], pad)])
+                qs = np.concatenate([qs, np.repeat(qs[:1], pad)])
+                firsts = np.concatenate([firsts, np.repeat(firsts[:1], pad)])
+                ns = np.concatenate([ns, np.zeros(pad, np.int32)])
+            ids, hits = intersect_rounds.segmented_decode_and(
+                pk["tiles"], jnp.asarray(slots), jnp.asarray(qs),
+                jnp.asarray(firsts), jnp.asarray(ns), cand_tiles,
+                bw=bw, crows=self._cand_rows)
+            ids_parts.append(ids.reshape(w, -1))
+            hit_parts.append(hits.reshape(w, -1))
+            qs_parts.append(qs)
+            self.stats["fused_calls"] += 1
+            self.stats["fused_blocks"] += len(items)
+        cat = (lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
+        return (cat(ids_parts), cat(hit_parts),
+                np.concatenate(qs_parts) if len(qs_parts) > 1 else qs_parts[0])

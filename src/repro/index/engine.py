@@ -20,13 +20,17 @@ hardware-speed along three axes:
      vectors are cached the same way for OR queries.
   4. **Device-resident execution** (``to_device()``) — the compressed blocks
      live in ``repro.index.device.DeviceArena`` arenas; per AND round the
-     engine builds one (term, block, candidate-range) work-list across the
-     *whole batch* on host, dedupes hot blocks so each decodes at most once
-     per batch, and issues ONE jitted lane-parallel decode instead of
-     O(blocks) Python iterations.  Under the ``fused`` placement eligible
-     term intersections additionally run the ``kernels/decode_fused`` Pallas
-     kernel: decode + candidate bitmap-AND fused in VMEM, next block
-     prefetched.  Results are bit-identical to the host path.
+     engine dedupes the *whole batch's* (term, block) work-list and issues
+     ONE jitted lane-parallel decode instead of O(blocks) Python iterations.
+     The per-query candidate sets live in a **device-resident segmented
+     bitmap** across rounds (``kernels/intersect_rounds``): every round
+     probes the old bitmap and scatters the survivors on device, block
+     selection uses only static skip metadata (block first/last docids), and
+     the only candidate download is the final result — zero host candidate
+     syncs between rounds.  Under the ``fused`` placement the rounds run the
+     segmented Pallas kernel instead: unpack + d-gap prefix sum + per-query
+     bitmap probe in VMEM, with both the gap tile and the query's candidate
+     tile DMA double-buffered.  Results are bit-identical to the host path.
 
 Execution is planned, then run: ``engine.plan(batch)`` resolves *once* where
 the batch runs (placement: host / device / fused) and what every referenced
@@ -56,12 +60,20 @@ from collections import OrderedDict
 from typing import Mapping, Optional
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
-from repro.kernels import intersect
+from repro.kernels import intersect, intersect_rounds
+from .device import _bucket     # one shared jit-bucket policy with the arena
 from .invindex import InvertedIndex
 
 K1, B = 1.2, 0.75
+
+# plan-time auto-placement: below this batch size the host numpy path beats
+# the device round machinery (BENCH_query.json, batch=1: 14.0k host vs 3.3k
+# device qps on the CI backend), so tiny batches are planned onto the host
+# even when arenas exist
+HOST_BATCH_MAX = 1
 
 _EMPTY_U32 = np.zeros(0, np.uint32)
 _EMPTY_U32.setflags(write=False)
@@ -164,8 +176,11 @@ class ExecutionPlan:
     """A typed, resolved execution of one ``QueryBatch``.
 
     placement: where the batch runs — "host" (numpy per query, grouped by
-        term signature), "device" (round-batched arena work-list decode), or
-        "fused" (device + the fused decode+AND kernel for covered terms).
+        term signature), "device" (round-batched arena work-list decode with
+        device-resident candidates), or "fused" (device + the segmented fused
+        decode+probe kernel for covered terms).  Tiny batches (<=
+        ``HOST_BATCH_MAX`` queries) are auto-placed on the host even when
+        arenas exist; ``note`` records that decision in the plan's repr.
     terms: per distinct referenced term, its :class:`TermCaps`.  Unknown
         terms (absent from the index) are omitted — execution ignores them.
 
@@ -177,6 +192,7 @@ class ExecutionPlan:
     placement: str
     queries: tuple
     terms: Mapping[int, TermCaps]
+    note: str = ""
 
 
 class QueryEngine:
@@ -189,8 +205,13 @@ class QueryEngine:
         self._avdl = float(np.asarray(idx.doclen).mean()) if idx.n_docs else 1.0
         self.arena = None
         self._fused = fused
+        # resident_rounds: AND rounds executed with candidates device-resident
+        # cand_syncs: per-round candidate downloads (legacy device loop only;
+        #   the resident path never syncs between rounds)
+        # final_syncs: end-of-batch result downloads (one per resident batch)
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
-                          "fallback_decodes": 0}
+                          "fallback_decodes": 0, "resident_rounds": 0,
+                          "cand_syncs": 0, "final_syncs": 0}
         if device or fused:
             # deprecated: construct with defaults and call to_device() instead
             warnings.warn(
@@ -346,7 +367,11 @@ class QueryEngine:
 
     def and_many(self, queries: list,
                  terms: Mapping[int, TermCaps] | None = None) -> list:
-        """AND all queries together, round-batched for the device arenas.
+        """AND all queries together, round-batched for the device arenas —
+        the legacy loop that syncs every query's candidates to the host
+        between rounds (planned execution now runs the device-resident
+        ``_and_many_resident`` instead; this stays for direct callers and as
+        the host-candidate reference).
 
         Round r intersects every still-active query with its (r+1)-th rarest
         term; the round's (term, block) needs across the WHOLE batch are
@@ -392,8 +417,155 @@ class QueryEngine:
                 t, cut, sel, fused = plans[i]
                 cands[i] = self._intersect_plan(t, cut, sel, cands[i], fused)
                 owned[i] = True
+            if self.arena is not None:
+                # every active query's surviving candidates just landed on
+                # the host for the next round's block plan
+                self.dev_stats["cand_syncs"] += len(active)
             r += 1
         return [c if o else c.copy() for c, o in zip(cands, owned)]
+
+    # ---- device-resident AND rounds ---------------------------------------- #
+
+    def _select_blocks_static(self, t: int, cov_f: np.ndarray,
+                              cov_l: np.ndarray) -> np.ndarray:
+        """Blocks of term t whose [first, last] docid range overlaps any of
+        the seed coverage intervals — computed purely from build-time skip
+        metadata, so no candidate state is needed on the host.  The selection
+        is a superset of the blocks holding candidates, which is all the
+        probe-and-scatter round needs for exactness."""
+        f = self.idx.block_firsts(t)
+        l = self.idx.block_lasts(t)
+        j = np.searchsorted(cov_l, f)            # first interval ending >= f
+        hit = j < len(cov_l)
+        jc = np.minimum(j, max(len(cov_f) - 1, 0))
+        return np.flatnonzero(hit & (cov_f[jc] <= l))
+
+    def _round_rows(self, entries: list) -> dict:
+        """Dedupe a round's (term, block) docid work-list against the cache
+        and decode the misses in one device-resident arena call; returns
+        {(t, bi): (padded_device_row, n)} for every entry, pinned for the
+        round regardless of cache eviction pressure."""
+        out: dict = {}
+        missing: list = []
+        for e in entries:
+            if e in out:
+                continue
+            v = self.cache.get((e[0], e[1], 2))
+            if v is None:
+                out[e] = None
+                missing.append(e)
+            else:
+                out[e] = v
+        self.dev_stats["worklist_decodes"] += len(missing)
+        if missing:
+            rows, ns = self.arena.decode_blocks_device(missing)
+            for e, row, n in zip(missing, rows, ns):
+                out[e] = (row, n)
+                self.cache.put((e[0], e[1], 2), (row, n))
+        return out
+
+    def _and_many_resident(self, queries: list,
+                           terms: Mapping[int, TermCaps] | None = None,
+                           use_fused: bool = False) -> list:
+        """AND the batch with candidates device-resident across rounds.
+
+        Round 0 scatters every query's rarest term into its row of a
+        segmented candidate bitmap (one device array for the whole batch);
+        round r >= 1 decodes the round's deduped (term, block) work-list,
+        probes each decoded docid against its query's bitmap segment and
+        scatters the survivors — all on device
+        (``kernels/intersect_rounds``).  Block selection is conservative and
+        static (seed-term coverage intervals from the skip tables), so no
+        candidate ever returns to the host until the single final copy.
+        Under ``use_fused`` the rounds run the segmented Pallas
+        decode+probe kernel over the packed gap tiles instead.
+
+        Results are bit-identical to ``and_query`` per query.
+        """
+        idx = self.idx
+        nq = len(queries)
+        if nq == 0:
+            return []
+        qterms = [sorted((t for t in q if t in idx.terms),
+                         key=lambda t: idx.terms[t].df) for q in queries]
+        words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
+        nqp = _bucket(nq)
+        bm = jnp.zeros((nqp, words), jnp.uint32)
+
+        def scatter(pairs, active_idx, probe):
+            """One bitmap_round call: decode rows for `pairs`, probe+scatter."""
+            active = np.zeros(nqp, bool)
+            active[active_idx] = True
+            if not pairs:
+                # nothing decodes for the active queries: with no survivors
+                # their intersections are simply empty
+                return jnp.where(jnp.asarray(active)[:, None],
+                                 jnp.uint32(0), bm)
+            rows = self._round_rows([(t, bi) for _, t, bi in pairs])
+            # stack once per unique entry, then fan out to pairs with one
+            # device gather — shared hot blocks are not re-stacked per query
+            ent = list(rows)
+            ent_row = {e: k for k, e in enumerate(ent)}
+            mat = (rows[ent[0]][0][None] if len(ent) == 1
+                   else jnp.stack([rows[e][0] for e in ent]))
+            p = _bucket(len(pairs))
+            sel = np.zeros(p, np.int64)
+            sel[:len(pairs)] = [ent_row[(t, bi)] for _, t, bi in pairs]
+            qs = np.zeros(p, np.int32)
+            qs[:len(pairs)] = [q for q, _, _ in pairs]
+            ns = np.zeros(p, np.int32)
+            ns[:len(pairs)] = [rows[(t, bi)][1] for _, t, bi in pairs]
+            return intersect_rounds.bitmap_round(
+                bm, mat[jnp.asarray(sel)], jnp.asarray(qs), jnp.asarray(ns),
+                jnp.asarray(active), probe=probe)
+
+        # round 0: seed every query's bitmap row with its rarest term
+        seeds = [i for i, ts in enumerate(qterms)
+                 if ts and idx.terms[ts[0]].df]
+        for ts in qterms:               # raw seed-term block references,
+            if ts:                      # pre-dedup (work-list metric)
+                self.dev_stats["worklist_refs"] += idx.n_blocks(ts[0])
+        pairs0 = [(i, qterms[i][0], bi) for i in seeds
+                  for bi in range(idx.n_blocks(qterms[i][0]))]
+        bm = scatter(pairs0, seeds, probe=False)
+        cov = {i: (idx.block_firsts(qterms[i][0]),
+                   idx.block_lasts(qterms[i][0])) for i in seeds}
+
+        live = set(seeds)
+        r = 1
+        while True:
+            active = [i for i in live if len(qterms[i]) > r]
+            if not active:
+                break
+            self.dev_stats["resident_rounds"] += 1
+            plain, fused_pairs, plain_q, fused_q = [], [], [], []
+            for i in active:
+                t = qterms[i][r]
+                sel = self._select_blocks_static(t, *cov[i])
+                self.dev_stats["worklist_refs"] += len(sel)
+                f = use_fused and (terms[t].fused if terms is not None
+                                   else self.arena.has_fused(t, sel))
+                (fused_pairs if f else plain).extend(
+                    (i, t, int(bi)) for bi in sel)
+                (fused_q if f else plain_q).append(i)
+            if plain_q:
+                bm = scatter(plain, plain_q, probe=True)
+            if fused_pairs:
+                active_f = np.zeros(nqp, bool)
+                active_f[fused_q] = True
+                ids, hits, qs = self.arena.fused_round(
+                    fused_pairs, bm.reshape(nqp * crows, -1))
+                bm = intersect_rounds.bitmap_round_masked(
+                    bm, ids.reshape(len(qs), -1),
+                    jnp.asarray(qs), hits.reshape(len(qs), -1),
+                    jnp.asarray(active_f))
+            elif fused_q:       # all selections empty -> intersection empties
+                bm = scatter([], fused_q, probe=True)
+            r += 1
+
+        # the single host copy: final bitmaps -> sorted docid arrays
+        self.dev_stats["final_syncs"] += 1
+        return intersect_rounds.extract_ids(np.asarray(bm)[:nq], idx.n_docs)
 
     def and_query(self, terms: list) -> np.ndarray:
         terms = sorted((t for t in terms if t in self.idx.terms),
@@ -472,6 +644,12 @@ class QueryEngine:
             raise KeyError(batch.mode)
         placement = ("fused" if self.arena is not None and self._fused else
                      "device" if self.arena is not None else "host")
+        note = ""
+        if placement != "host" and len(batch.queries) <= HOST_BATCH_MAX:
+            note = (f"auto-placed host: batch={len(batch.queries)} <= "
+                    f"HOST_BATCH_MAX={HOST_BATCH_MAX} (tiny batches win on "
+                    f"the host path)")
+            placement = "host"
         terms: dict[int, TermCaps] = {}
         for q in batch.queries:
             for t in q:
@@ -487,7 +665,7 @@ class QueryEngine:
                         t, range(len(blocks)))))
         return ExecutionPlan(mode=batch.mode, k=batch.k, placement=placement,
                              queries=tuple(tuple(q) for q in batch.queries),
-                             terms=terms)
+                             terms=terms, note=note)
 
     def execute(self, work) -> list:
         """Run an :class:`ExecutionPlan`; results align with the planned
@@ -522,24 +700,27 @@ class QueryEngine:
         order = sorted(range(len(plan.queries)),
                        key=lambda i: tuple(sorted(plan.queries[i])))
         results = [None] * len(plan.queries)
-        # a host plan stays pinned to host intersection even on an engine
-        # that has since gained fused arenas — placement is the plan's
-        # contract, not a hint.  (Block *decodes* still use the engine's
-        # current backend; the bits are identical either way.)
+        # a host plan stays pinned to host intersection AND host block
+        # decodes even on an engine that has arenas — placement is the
+        # plan's contract, not a hint (and per-block arena calls would be
+        # strictly slower than the numpy oracle for the tiny batches the
+        # auto-placement sends here); the bits are identical either way.
         prev_fused, self._fused = self._fused, False
+        prev_arena, self.arena = self.arena, None
         try:
             for i in order:
                 results[i] = fn(list(plan.queries[i]))
         finally:
-            self._fused = prev_fused
+            self._fused, self.arena = prev_fused, prev_arena
         return results
 
     def _execute_device(self, plan: ExecutionPlan) -> list:
         queries = [list(q) for q in plan.queries]
+        fused = plan.placement == "fused"
         if plan.mode == "and":
-            return self.and_many(queries, plan.terms)
+            return self._and_many_resident(queries, plan.terms, fused)
         if plan.mode == "and_scored":
-            docs = self.and_many(queries, plan.terms)
+            docs = self._and_many_resident(queries, plan.terms, fused)
             self._prefetch_terms({t for q in queries for t in q})
             return [self._score_docs(q, d, plan.k)
                     for q, d in zip(queries, docs)]

@@ -33,9 +33,11 @@ SHORT_CODEC = "stream_vbyte"
 class TermPostings:
     df: int
     blocks: list                   # list of (first_docid, enc_gaps, enc_tfs)
+    lasts: np.ndarray = None       # last docid per block (skip upper bounds)
 
     def nbytes(self) -> int:
-        return sum(g.nbytes() + t.nbytes() for _, g, t in self.blocks) + 8 * len(self.blocks)
+        # + 4 per block for the last-docid column next to the skip pointer
+        return sum(g.nbytes() + t.nbytes() for _, g, t in self.blocks) + 12 * len(self.blocks)
 
 
 @dataclasses.dataclass
@@ -52,14 +54,16 @@ class InvertedIndex:
         terms = {}
         for t, (docids, tfs) in postings.items():
             use = spec if len(docids) >= SHORT else short
-            blocks = []
+            blocks, lasts = [], []
             for i in range(0, len(docids), SKIP):
                 ids = docids[i:i + SKIP]
                 gaps = dgap_encode_np(ids)
                 gaps = gaps.copy()
                 gaps[0] = 0                      # first docid kept in the skip entry
                 blocks.append((int(ids[0]), use.encode(gaps), use.encode(tfs[i:i + SKIP])))
-            terms[t] = TermPostings(len(docids), blocks)
+                lasts.append(int(ids[-1]))
+            terms[t] = TermPostings(len(docids), blocks,
+                                    np.asarray(lasts, np.int64))
         return InvertedIndex(codec, terms, len(doclen), np.asarray(doclen))
 
     def to_device(self, build_fused: bool = True):
@@ -82,6 +86,17 @@ class InvertedIndex:
     def block_firsts(self, t: int) -> np.ndarray:
         """Skip table: first docid of each block of term t (ascending)."""
         return np.asarray([b[0] for b in self.terms[t].blocks], np.int64)
+
+    def block_lasts(self, t: int) -> np.ndarray:
+        """Skip upper bounds: last docid of each block of term t.  Stored at
+        build time; reconstructed once (and cached) for indexes whose blocks
+        were assembled by hand."""
+        tp = self.terms[t]
+        if tp.lasts is None or len(tp.lasts) != len(tp.blocks):
+            tp.lasts = np.asarray(
+                [int(self.decode_block_ids(t, bi)[-1])
+                 for bi in range(len(tp.blocks))], np.int64)
+        return tp.lasts
 
     def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
         """Decompress only the docids of one block (AND queries skip TFs)."""

@@ -1,0 +1,185 @@
+"""Device-resident AND rounds: segmented candidate bitmaps + per-round
+intersection that never copies candidates back to the host.
+
+The PR-2 device AND loop kept the *decode* on device but synced every query's
+candidate set to the host between rounds: round r downloaded the surviving
+docids, ran ``searchsorted`` pruning + per-block intersection in numpy, and
+re-uploaded the shrunken set for round r+1.  Lemire & Boytsov's intersection
+work (PAPERS.md) makes the case for keeping the whole multi-round pipeline
+vectorized; this module is that pipeline's state + kernels:
+
+  * **segmented candidate bitmap** — the whole batch's candidate sets as ONE
+    device array of shape (n_queries, words): query q owns row q, a packed
+    LSB-first bitmap over [0, n_docs) (``intersect.bitmap_build_np`` order,
+    padded to whole (rows, 128) tiles so the Pallas path can treat row q as a
+    (rows, 128) tile block).
+  * ``bitmap_round`` — one jitted call per AND round: every work-list lane
+    probes its query's segment of the *old* bitmap (decode results feed in
+    directly as padded (out_width,) docid rows), and survivors are scattered
+    into the *new* bitmap.  Distinct docids per (query, term) guarantee the
+    scatter-add is an exact bitwise OR.  Inactive queries carry their segment
+    forward untouched.
+  * ``segmented_decode_and`` — the Pallas form for the fused placement: the
+    ``kernels/decode_fused`` unpack + prefix-sum + bitmap-probe kernel,
+    generalized so every work-list entry selects *its own query's* candidate
+    tile block via a scalar-prefetched query-slot array (the candidate DMA is
+    double-buffered exactly like the gap-tile DMA).
+  * ``extract_ids`` — the single final host copy: bitmap rows back to sorted
+    uint32 docid arrays, once per batch, after the last round.
+
+Correctness does not depend on block selection: decoding a superset of the
+blocks that could hold candidates is sound, because ids outside the current
+candidate set fail the probe and scatter nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitpack import LANES, _mask, auto_interpret
+from .decode_fused import BLOCK_ROWS, rows_per_block
+
+
+def bitmap_geometry(n_docs: int) -> tuple[int, int]:
+    """(words, rows) of one query's candidate bitmap segment: enough uint32
+    words to cover [0, n_docs), padded to whole (rows, 128) lane tiles."""
+    cw = max(1, -(-n_docs // 32))
+    rows = -(-cw // LANES)
+    return rows * LANES, rows
+
+
+# --------------------------------------------------------------------------- #
+# probe + scatter round (jnp; the generic-arena placement)
+# --------------------------------------------------------------------------- #
+
+
+def _scatter_survivors(bm, ids, qslot, surv):
+    """OR survivor docids into a fresh bitmap: scatter-add is exact because
+    every (query, term) contributes each docid at most once per round."""
+    word = (ids >> 5).astype(jnp.int32)
+    bit = (ids & 31).astype(jnp.uint32)
+    contrib = jnp.where(surv, jnp.uint32(1) << bit, jnp.uint32(0))
+    return jnp.zeros_like(bm).at[qslot[:, None], word].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("probe",))
+def bitmap_round(bm, ids, qslot, ns, active, *, probe: bool = True):
+    """One device-resident AND round over the whole batch.
+
+    bm:     (Q, words) uint32 — segmented candidate bitmap (old state).
+    ids:    (P, out_width) uint32 — decoded docid rows, one per work-list
+            (query, block) pair, zero-padded past ``ns``.
+    qslot:  (P,) int32 — owning query row per pair.
+    ns:     (P,) int32 — valid posting count per pair (0 for jit padding).
+    active: (Q,) bool — queries intersecting this round; inactive rows keep
+            their old segment.
+    probe:  False builds the seed bitmap (round 0: no old candidates yet).
+
+    Returns the new (Q, words) bitmap, still on device.
+    """
+    lane = jnp.arange(ids.shape[1], dtype=jnp.int32)
+    surv = lane[None, :] < ns[:, None]
+    if probe:
+        word = (ids >> 5).astype(jnp.int32)
+        bit = (ids & 31).astype(jnp.uint32)
+        hit = (bm[qslot[:, None], word] >> bit) & jnp.uint32(1)
+        surv = surv & (hit == 1)
+    new = _scatter_survivors(bm, ids, qslot, surv)
+    return jnp.where(active[:, None], new, bm)
+
+
+@jax.jit
+def bitmap_round_masked(bm, ids, qslot, hits, active):
+    """Like :func:`bitmap_round` but with the probe already applied — ``hits``
+    is the per-lane survivor mask a fused kernel produced."""
+    new = _scatter_survivors(bm, ids, qslot, hits != 0)
+    return jnp.where(active[:, None], new, bm)
+
+
+# --------------------------------------------------------------------------- #
+# segmented fused decode + probe (Pallas; the fused placement)
+# --------------------------------------------------------------------------- #
+
+
+def _seg_kernel(slot_ref, qs_ref, first_ref, n_ref, tile_ref, cand_ref,
+                ids_ref, hit_ref, *, bw: int, cand_words: int):
+    """decode_fused's unpack + d-gap prefix sum + bitmap probe, against the
+    candidate tile block of *this entry's query* (both the gap tile and the
+    candidate block are selected by scalar-prefetched work-list arrays, so
+    the next entry's DMAs pipeline while the current one computes)."""
+    i = pl.program_id(0)
+    m = _mask(bw)
+    base = first_ref[i]
+    nn = n_ref[i]
+    cand = cand_ref[...].reshape(-1)
+    lane = jnp.arange(LANES, dtype=jnp.int32)
+    for r in range(BLOCK_ROWS):
+        start = r * bw
+        w, off = start // 32, start % 32
+        v = tile_ref[w, :] >> jnp.uint32(off)
+        if off + bw > 32:
+            v = v | (tile_ref[w + 1, :] << jnp.uint32(32 - off))
+        v = v & m
+        c = jnp.cumsum(v, dtype=jnp.uint32)
+        d = c + base
+        base = base + c[-1]
+        word = cand[jnp.minimum(d >> 5, jnp.uint32(cand_words - 1)).astype(jnp.int32)]
+        hit = (word >> (d & 31)) & jnp.uint32(1)
+        valid = (lane + r * LANES) < nn
+        ids_ref[r, :] = d
+        hit_ref[r, :] = jnp.where(valid, hit, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "crows", "interpret"))
+def segmented_decode_and(tiles, slots, qslots, firsts, ns, cand_tiles,
+                         bw: int, crows: int,
+                         interpret=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode + probe a round's work-list against per-query bitmap segments.
+
+    tiles:      (S * rows_per_block(bw), 128) uint32 packed gap arena.
+    slots:      (W,) int32 arena tile index per entry.
+    qslots:     (W,) int32 owning query row per entry — selects the entry's
+                candidate tile block.
+    firsts:     (W,) uint32 first docid per entry (skip-table value).
+    ns:         (W,) int32 posting count per entry (0 entries hit nothing).
+    cand_tiles: (Q * crows, 128) uint32 — the segmented bitmap, query q
+                owning rows [q * crows, (q + 1) * crows).
+
+    Returns (docids, hits), each (W * 4, 128) uint32; entry j owns rows
+    [4j, 4j + 4) in linear order.
+    """
+    w = slots.shape[0]
+    rpb = rows_per_block(bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((rpb, LANES), lambda i, s, q, f, n: (s[i], 0)),
+                  pl.BlockSpec((crows, LANES), lambda i, s, q, f, n: (q[i], 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s, q, f, n: (i, 0)),
+                   pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s, q, f, n: (i, 0))],
+    )
+    return pl.pallas_call(
+        functools.partial(_seg_kernel, bw=bw, cand_words=crows * LANES),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((w * BLOCK_ROWS, LANES), jnp.uint32),
+                   jax.ShapeDtypeStruct((w * BLOCK_ROWS, LANES), jnp.uint32)],
+        interpret=auto_interpret(interpret),
+    )(slots, qslots, firsts, ns, tiles, cand_tiles)
+
+
+# --------------------------------------------------------------------------- #
+# final extraction (the one host copy per batch)
+# --------------------------------------------------------------------------- #
+
+
+def extract_ids(bm_np: np.ndarray, n_docs: int) -> list:
+    """Bitmap rows -> sorted uint32 docid arrays (fresh, caller-owned)."""
+    bits = np.unpackbits(np.ascontiguousarray(bm_np).view(np.uint8),
+                         axis=1, bitorder="little")[:, :n_docs]
+    return [np.flatnonzero(b).astype(np.uint32) for b in bits]

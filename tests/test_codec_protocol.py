@@ -34,21 +34,21 @@ def _cases(max_bits: int) -> dict:
 
 def _arena_roundtrip(spec, x: np.ndarray) -> None:
     """Decode one encoded block through the declared ArenaLayout exactly the
-    way ``repro.index.device`` does: padded fixed-shape ctrl/data slices plus
-    dynamic lengths."""
+    way ``repro.index.device`` does: one padded fixed-shape slice per
+    declared column plus dynamic per-column lengths."""
     lay = spec.arena
     enc = spec.encode(x)
-    ctrl = np.asarray(lay.block_ctrl(enc), lay.ctrl_dtype).reshape(-1)
-    data = np.asarray(lay.block_data(enc), np.uint32).reshape(-1)
-    # declared padded maxima actually bound the block's words
-    assert ctrl.size <= lay.ctrl_width, (spec.name, ctrl.size, lay.ctrl_width)
-    assert data.size <= lay.data_width, (spec.name, data.size, lay.data_width)
-    ctrl_p = np.zeros(lay.ctrl_width, lay.ctrl_dtype)
-    ctrl_p[: ctrl.size] = ctrl
-    data_p = np.zeros(lay.data_width, np.uint32)
-    data_p[: data.size] = data
-    out = np.asarray(lay.decode_block(jnp.asarray(ctrl_p), jnp.asarray(data_p),
-                                      jnp.int32(ctrl.size), jnp.int32(enc.n)))
+    slices, lens = [], []
+    for col in lay.columns:
+        words = np.asarray(col.extract(enc), col.dtype).reshape(-1)
+        # declared padded maxima actually bound the block's words
+        assert words.size <= col.width, (spec.name, col.name, words.size,
+                                         col.width)
+        padded = np.zeros(col.width, col.dtype)
+        padded[: words.size] = words
+        slices.append(jnp.asarray(padded))
+        lens.append(jnp.int32(words.size))
+    out = np.asarray(lay.decode_block(*slices, *lens, jnp.int32(enc.n)))
     assert out.shape == (lay.out_width,), (spec.name, out.shape)
     np.testing.assert_array_equal(out[: enc.n], x, err_msg=f"{spec.name}/arena")
     assert not out[enc.n:].any(), f"{spec.name}: arena decode not zero-padded"
@@ -90,13 +90,25 @@ def test_capability_declarations_match_behavior(name):
         assert spec.decode_jax_vec is spec.jax.vec
     if spec.arena is not None:
         lay = spec.arena
-        assert lay.ctrl_width > 0 and lay.data_width > 0
+        assert len(lay.columns) >= 2
+        assert all(c.width > 0 and c.name and callable(c.extract)
+                   for c in lay.columns)
+        # the 2-column alias surface stays coherent with the columns
+        assert lay.ctrl_width == lay.columns[0].width
+        assert lay.data_width == lay.columns[1].width
+        assert lay.block_ctrl is lay.columns[0].extract
+        assert lay.block_data is lay.columns[1].extract
         assert lay.out_width >= lay.max_n > 0
         assert callable(lay.decode_block)
-        assert callable(lay.block_ctrl) and callable(lay.block_data)
         assert callable(lay.supports)
         # the declared layout accepts this codec's own encodings
         assert lay.supports(spec.encode(np.arange(20, dtype=np.uint32)))
+        # a codec that stores exceptions must give them a declared column
+        probe = np.arange(40, dtype=np.uint32) % 13
+        probe[::17] = np.uint32(2 ** min(spec.max_bits, 32) - 1)
+        enc = spec.encode(probe)
+        if enc.exceptions is not None and len(enc.exceptions):
+            assert any(c.name == "exceptions" for c in lay.columns), spec.name
 
 
 def test_bp_arena_supports_guards_frame_layout():

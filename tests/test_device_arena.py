@@ -301,3 +301,109 @@ def test_to_device_is_cached_and_idempotent():
     eng = QueryEngine(idx).to_device()
     assert eng.arena is a1
     assert eng.to_device(fused=True) is eng and eng._fused
+
+
+# --------------------------------------------------------------------------- #
+# exception-bearing arena codecs + device-resident rounds
+# --------------------------------------------------------------------------- #
+
+EXC_CODECS = ["group_afor", "group_vse", "group_pfd", "group_optpfd"]
+
+
+def _heavy_corpus():
+    """Heavy-tailed postings: big docid-gap outliers drive the PFD family to
+    emit non-empty exception streams, and the dfs straddle the 512-posting
+    block boundary so frame/exception state crosses blocks."""
+    rng = np.random.default_rng(77)
+    n_docs = 400_000
+    postings = {}
+    for t, df in enumerate([511, 512, 513, 1024, 700, 300]):
+        gaps = rng.integers(1, 12, df).astype(np.int64)
+        gaps[rng.random(df) < 0.02] += rng.integers(1 << 10, 1 << 14)
+        ids = np.cumsum(gaps)
+        assert ids[-1] < n_docs
+        postings[t] = (ids.astype(np.uint32),
+                       rng.geometric(0.4, df).astype(np.uint32))
+    doclen = np.full(n_docs, 100, np.int64)
+    return doclen, postings
+
+
+HDOCLEN, HPOSTINGS = _heavy_corpus()
+HQUERIES = [[0, 1], [1, 2, 3], [0, 3, 4, 5], [2, 4], [3], [5, 1, 0]]
+
+
+@pytest.mark.parametrize("name", EXC_CODECS)
+def test_exception_codecs_decode_natively_no_oracle_fallback(name):
+    """Acceptance: the AFOR/PFD/VSE families decode in the device arena with
+    no numpy-oracle fallback on their blocks, bit-identical to decode_np."""
+    idx = InvertedIndex.build(HDOCLEN, HPOSTINGS, codec=name)
+    if name in ("group_pfd", "group_optpfd"):
+        # the corpus actually exercises the exception path
+        assert any(encg.exceptions is not None and len(encg.exceptions)
+                   for tp in idx.terms.values()
+                   for _, encg, _ in tp.blocks), "corpus has no exceptions"
+    arena = DeviceArena.from_index(idx, build_fused=False)
+    entries = [(t, bi, f) for t in idx.terms
+               for bi in range(idx.n_blocks(t)) for f in (0, 1)]
+    got = arena.decode_blocks(entries)
+    for (t, bi, f), a in zip(entries, got):
+        want = idx.decode_block_ids(t, bi) if f == 0 else idx.decode_block_tfs(t, bi)
+        np.testing.assert_array_equal(a, want, err_msg=f"{name}/{t}/{bi}/{f}")
+    assert arena.stats["blocks_host"] == 0
+    assert arena.stats["blocks_device"] == len(entries)
+
+
+@pytest.mark.parametrize("name", EXC_CODECS)
+def test_exception_codecs_eviction_and_block_boundary_parity(name):
+    """Device engine under pathological cache eviction pressure stays exact
+    across the 511/512/513/1024 block boundaries for the new arena codecs."""
+    idx = InvertedIndex.build(HDOCLEN, HPOSTINGS, codec=name)
+    host = QueryEngine(idx)
+    tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1).to_device()
+    want = host.execute(QueryBatch(HQUERIES, mode="and"))
+    got = tiny.execute(tiny.plan(QueryBatch(HQUERIES, mode="and")))
+    assert tiny.cache.evictions > 0
+    for q, a, b in zip(HQUERIES, want, got):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name}/{q}")
+
+
+def test_multi_round_device_and_is_resident_with_zero_cand_syncs():
+    """Acceptance: a >= 3-term AND batch executes with zero host candidate
+    syncs between rounds, on both device and fused placements, with exact
+    result parity against the host placement."""
+    queries = [q for q in HQUERIES if len(q) >= 3] * 2
+    for name in ("group_pfd", "group_simple"):
+        idx = InvertedIndex.build(HDOCLEN, HPOSTINGS, codec=name)
+        want = QueryEngine(idx).execute(QueryBatch(queries, mode="and"))
+        for fused in (False, True):
+            eng = QueryEngine(idx).to_device(fused=fused)
+            got = eng.execute(eng.plan(QueryBatch(queries, mode="and")))
+            for q, a, b in zip(queries, want, got):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{name}/fused={fused}/{q}")
+                assert b.dtype == np.uint32 and b.flags.writeable
+            # >= 2 intersect rounds ran device-resident; candidates came
+            # back to the host exactly once (the final result copy)
+            assert eng.dev_stats["resident_rounds"] >= 2
+            assert eng.dev_stats["cand_syncs"] == 0
+            assert eng.dev_stats["final_syncs"] == 1
+            if fused:
+                assert eng.arena.stats["fused_calls"] > 0
+
+
+def test_plan_auto_places_tiny_batches_on_host():
+    """engine.plan() places batches of <= HOST_BATCH_MAX queries on the host
+    even when device arenas exist, and records why in the plan's repr."""
+    from repro.index.engine import HOST_BATCH_MAX
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    dev = QueryEngine(idx).to_device(fused=True)
+    tiny = dev.plan(QueryBatch(QUERIES[:1], mode="and"))
+    assert tiny.placement == "host"
+    assert "HOST_BATCH_MAX" in tiny.note and tiny.note in repr(tiny)
+    big = dev.plan(QueryBatch(QUERIES, mode="and"))
+    assert big.placement == "fused" and big.note == ""
+    assert len(QUERIES) > HOST_BATCH_MAX
+    # the demoted plan still executes correctly on the device engine
+    want = QueryEngine(idx).execute(QueryBatch(QUERIES[:1], mode="and"))
+    for a, b in zip(want, dev.execute(tiny)):
+        np.testing.assert_array_equal(a, b)

@@ -6,15 +6,21 @@ Checks, per registered codec:
   1. required protocol fields are present and well-typed (name, category,
      encode, decode_np, max_bits);
   2. declared capabilities are structurally valid (JaxDecode's three
-     callables; ArenaLayout's positive padded widths and callables);
+     callables; every ArenaLayout column named, positively sized, with a
+     callable extractor);
   3. every declared ArenaLayout actually honors the fixed-shape contract on a
-     smoke input — padded ctrl/data slices, dynamic lengths, zero padding
-     past ``n_valid`` (the same harness the conformance tests use);
+     smoke input — one padded slice per declared column, dynamic lengths,
+     zero padding past ``n_valid`` (the same harness the conformance tests
+     use);
   4. every arena capability is covered by the device/host parity sweep: the
      sweep's codec list (``tests/test_device_arena.py::ARENA_CODECS``) must
      be derived from the declarations, so a codec declaring an arena without
      parity coverage (or a hand-pinned test list drifting from the registry)
-     fails here.
+     fails here;
+  5. exception-column consistency: a codec whose encoder stores a non-empty
+     ``Encoded.exceptions`` patch stream on a heavy-tailed probe round-trip
+     MUST declare an ``"exceptions"`` arena column — otherwise its arena
+     decode would silently drop the patches.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -58,11 +64,19 @@ def lint_protocol(errors: list) -> None:
                     _fail(errors, f"{name}: JaxDecode.{field} not callable")
         if spec.arena is not None:
             lay = spec.arena
-            if min(lay.ctrl_width, lay.data_width, lay.out_width, lay.max_n) <= 0:
-                _fail(errors, f"{name}: ArenaLayout widths must be positive")
+            if len(lay.columns) < 2:
+                _fail(errors, f"{name}: ArenaLayout declares "
+                              f"{len(lay.columns)} column(s); need >= 2")
+            for col in lay.columns:
+                if not col.name or col.width <= 0 or not callable(col.extract):
+                    _fail(errors, f"{name}: ArenaLayout column {col.name!r} "
+                                  f"malformed (width {col.width})")
+            if min(lay.out_width, lay.max_n) <= 0:
+                _fail(errors, f"{name}: ArenaLayout out_width/max_n must be "
+                              f"positive")
             if lay.out_width < lay.max_n:
                 _fail(errors, f"{name}: out_width {lay.out_width} < max_n {lay.max_n}")
-            for field in ("decode_block", "block_ctrl", "block_data"):
+            for field in ("decode_block", "supports"):
                 if not callable(getattr(lay, field)):
                     _fail(errors, f"{name}: ArenaLayout.{field} not callable")
 
@@ -91,6 +105,32 @@ def lint_arena_contract(errors: list) -> None:
             _fail(errors, f"{name}: arena contract violated: {e}")
 
 
+def lint_exception_columns(errors: list) -> None:
+    """A codec that stores exceptions must declare an arena column for them.
+
+    The probe is heavy-tailed (mostly tiny values, sparse huge outliers) —
+    the shape that drives patched codecs (the Group-PFD family) to emit a
+    non-empty ``Encoded.exceptions`` stream.  A declared ArenaLayout without
+    an ``"exceptions"`` column would decode such blocks with the patches
+    silently dropped, so that combination fails the lint.
+    """
+    rng = np.random.default_rng(5)
+    for name in codec.names():
+        spec = codec.get(name)
+        if spec.arena is None:
+            continue
+        probe = rng.integers(0, 16, 400, dtype=np.int64).astype(np.uint32)
+        probe[::50] = np.uint32(2 ** min(spec.max_bits, 32) - 1)
+        enc = spec.encode(probe)
+        np.testing.assert_array_equal(spec.decode_np(enc), probe)
+        if (enc.exceptions is not None and len(enc.exceptions)
+                and not any(c.name == "exceptions"
+                            for c in spec.arena.columns)):
+            _fail(errors, f"{name}: stores a non-empty exception stream but "
+                          f"declares an ArenaLayout without an 'exceptions' "
+                          f"column")
+
+
 def lint_parity_coverage(errors: list) -> None:
     mod = _load("test_device_arena", "tests", "test_device_arena.py")
     declared = {n for n in codec.names() if codec.get(n).arena is not None}
@@ -107,6 +147,7 @@ def main() -> int:
     errors: list = []
     lint_protocol(errors)
     lint_arena_contract(errors)
+    lint_exception_columns(errors)
     lint_parity_coverage(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
