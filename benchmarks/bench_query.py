@@ -5,9 +5,12 @@ numpy path AND the device-arena path (``QueryEngine.to_device()``), against
 the seed per-query ``np.isin`` loop (``and_query_ref``).
 
 The batched run also records the device work-list discipline — raw (term,
-block) references per batch vs deduped decodes actually issued — and writes
-the whole thing to ``BENCH_query.json`` (override the path with the
-``BENCH_QUERY_JSON`` env var) so CI can track the perf trajectory as an
+block) references per batch vs deduped decodes actually issued — plus the
+ranked modes (``or`` / ``and_scored`` through the quantized score arenas and
+block-max top-k: qps per placement, ``blocks_pruned`` / ``blocks_scored``,
+and per-round host syncs, which must be zero on the resident ranked path) —
+and writes the whole thing to ``BENCH_query.json`` (override the path with
+the ``BENCH_QUERY_JSON`` env var) so CI can track the perf trajectory as an
 artifact.  On the CPU/interpret CI backend the device path's wall-clock is
 not the headline (jitted gathers vs raw numpy); the tracked guarantee there
 is ``decodes_per_hot_block == 1.0``: each hot (term, block) decodes at most
@@ -52,6 +55,19 @@ def make_queries(postings: dict, n_queries: int, seed: int = 3) -> list:
     rng = np.random.default_rng(seed)
     terms = sorted(postings)
     return [rng.choice(terms[:120], size=rng.integers(2, 4), replace=False).tolist()
+            for _ in range(n_queries)]
+
+
+def make_ranked_queries(postings: dict, n_queries: int, seed: int = 7) -> list:
+    """Ranked workload: one tail term (high idf -> strong impacts) plus 1-2
+    head terms per query — the rare+common shape where block-max pruning
+    earns its keep (head-term blocks outside the tail term's docid
+    neighbourhood can't reach the top-k threshold)."""
+    rng = np.random.default_rng(seed)
+    terms = sorted(postings)
+    return [[int(rng.choice(terms[120:]))]
+            + rng.choice(terms[:120], size=rng.integers(1, 3),
+                         replace=False).tolist()
             for _ in range(n_queries)]
 
 
@@ -160,6 +176,42 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
         emit(f"query/{dataset}/{codec}/residency_{placement}", 0.0,
              f"{stats['rounds_on_device']}rounds_on_device,"
              f"{stats['host_syncs_per_query']:.3f}syncs_per_query")
+
+    # ranked modes (or / and_scored): quantized score arenas + block-max
+    # top-k.  Arenas, fused tiles, and the score column are built once
+    # outside the timers; the tracked CI guarantees are blocks_pruned > 0
+    # (the upper-bound test actually drops work) and zero per-round host
+    # syncs (only the final candidate bitmap is downloaded, once per batch).
+    ranked_queries = make_ranked_queries(postings, n_queries)
+    idx.to_device(build_fused=True).ensure_scores()
+    report["ranked"] = {}
+    for mode in ("or", "and_scored"):
+        entry = {"k": 10, "qps": {}}
+        for placement in ("host", "device", "fused"):
+
+            def run_ranked():
+                eng = QueryEngine(idx)
+                if placement != "host":
+                    eng.to_device(fused=placement == "fused")
+                for i in range(0, len(ranked_queries), 64):
+                    eng.execute(eng.plan(QueryBatch(
+                        ranked_queries[i:i + 64], mode=mode, k=10)))
+
+            t = timeit(run_ranked, repeats=3, warmup=1)
+            entry["qps"][placement] = n_queries / t
+            emit(f"query/{dataset}/{codec}/{mode}_{placement}", t * 1e6,
+                 f"{n_queries / t:.1f}qps")
+        eng = QueryEngine(idx).to_device()
+        eng.execute(eng.plan(QueryBatch(ranked_queries, mode=mode, k=10)))
+        entry["blocks_pruned"] = eng.dev_stats["blocks_pruned"]
+        entry["blocks_scored"] = eng.dev_stats["blocks_scored"]
+        entry["score_rounds"] = eng.dev_stats["score_rounds"]
+        entry["host_syncs_per_query"] = eng.dev_stats["score_syncs"] / n_queries
+        entry["final_syncs"] = eng.dev_stats["final_syncs"]
+        report["ranked"][mode] = entry
+        emit(f"query/{dataset}/{codec}/{mode}_blockmax", 0.0,
+             f"{entry['blocks_pruned']}pruned,{entry['blocks_scored']}scored,"
+             f"{entry['host_syncs_per_query']:.3f}syncs_per_query")
 
     path = os.environ.get("BENCH_QUERY_JSON", "BENCH_query.json")
     with open(path, "w") as f:

@@ -99,6 +99,20 @@ def main() -> None:
           f"{ds['worklist_refs']} block refs -> {ds['worklist_decodes']} decodes "
           f"in {dev.arena.stats['device_calls'] - calls0} device calls")
 
+    # ranked top-k through the quantized score arenas: BM25 impacts ride as
+    # u8 score columns next to the docid streams, OR work-lists are block-max
+    # pruned, and only the final candidate bitmap returns to the host — the
+    # float rescore makes the results exactly the host oracle's (docid ties)
+    topk_plan = dev.plan(QueryBatch(queries[:64], mode="or", k=5))
+    top = dev.execute(topk_plan)
+    host_top = engine.execute(engine.plan(QueryBatch(queries[:64], mode="or", k=5)))
+    assert top == host_top
+    ds = dev.dev_stats
+    print(f"ranked top-k:   64 OR queries, k=5 -> top hit doc={top[0][0][0]} "
+          f"bm25={top[0][0][1]:.2f}; {ds['blocks_pruned']} blocks pruned / "
+          f"{ds['blocks_scored']} scored, {ds['score_syncs']} per-round syncs "
+          f"(exact parity with the host float oracle)")
+
 
 if __name__ == "__main__":
     main()

@@ -26,6 +26,36 @@ Layers (bottom up):
     then stay in a device-resident segmented bitmap across rounds
     (``repro.kernels.intersect_rounds`` — only the final result is copied to
     host), optionally through the segmented fused decode+probe Pallas kernel.
+  * ``scores`` — the ranked-retrieval subsystem: per-(term, doc) BM25
+    impacts quantized to u8 and packed as an additional score column per
+    posting block (``ScoreArena``, same padded-``ArenaColumn`` contract as
+    the codec arenas), with block-max / term-max / top-impact / docid-stripe
+    tables precomputed for WAND/BMW-style pruning.  ``or`` / ``and_scored``
+    plans accumulate the codes into a segmented device score buffer
+    (``repro.kernels.topk``) and sync one compacted candidate bitmap per
+    batch.
+
+Ranked retrieval (score columns, quantization contract, block-max pruning):
+``ScoreArena`` quantizes with a single global scale ``delta = max impact /
+255`` and ``code = floor(impact / delta)``; floor is monotone, so the stored
+block-max tables equal the maxima of the stored codes (the registry lint
+cross-checks this), and for a query of ``m`` known term occurrences any
+doc's true score S obeys ``C*delta <= S < (C+m)*delta`` around its quantized
+sum C.  Two consequences anchor exactness: the k-th largest quantized sum
+``theta`` lower-bounds the k-th best true score, so the device path syncs
+the candidate set ``{C >= theta - m}`` (as a bitmap, once per batch) and
+rescores it with the shared float oracle — top-k sets and scores match the
+host BM25 path bitwise, ties broken by ascending docid — and an OR
+(term, block) work-list entry is *pruned* before decode when its upper bound
+(own block-max + every other occurrence's max code over the block's docid
+range, read from the per-term docid-stripe tables + the margin m) cannot
+reach the static threshold theta0 (the k-th top impact code of the query's
+strongest term): pruned blocks only lose contributions of docs provably
+outside the true top-k.  ``and_scored`` reuses the AND machinery — the
+intersection bitmap gates the score scatter on device and is never
+downloaded.  ``BENCH_query.json`` tracks ``blocks_pruned`` /
+``blocks_scored`` and per-round host syncs (zero on the resident ranked
+path) per mode.
 
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a
@@ -72,4 +102,4 @@ Migration note (deprecated v1 surface, kept as delegating shims):
     read-only aliases).
 """
 
-from . import device, engine, invindex, query  # noqa: F401
+from . import device, engine, invindex, query, scores  # noqa: F401

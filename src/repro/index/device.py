@@ -52,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.core.bits import ebw_np
-from repro.kernels import decode_fused, intersect_rounds
+from repro.kernels import decode_fused, intersect_rounds, topk
 from repro.kernels.bitpack import LANES
 from repro.kernels.intersect import bitmap_build_np
 
@@ -202,6 +202,7 @@ class DeviceArena:
         self._groups: dict = {}
         self._build_compressed_arenas(idx)
         self._pk = None
+        self.scores = None
         if build_fused:
             self.ensure_fused()
 
@@ -257,6 +258,15 @@ class DeviceArena:
             self._pk[bw] = {"tiles": jnp.asarray(tiles),
                             "first": np.asarray(firsts, np.uint32),
                             "n": np.asarray(ns, np.int32)}
+        return self
+
+    def ensure_scores(self) -> "DeviceArena":
+        """Build the quantized impact score arena if absent: per posting
+        block one packed 128-word score column (``repro.index.scores``) plus
+        the block-max / term-max WAND tables, all device-resident."""
+        if self.scores is None:
+            from .scores import ScoreArena
+            self.scores = ScoreArena.from_index(self.idx)
         return self
 
     @classmethod
@@ -381,6 +391,49 @@ class DeviceArena:
             self.stats["fused_blocks"] += len(items)
         return np.concatenate(parts)
 
+    def _fused_rounds(self, pairs: list, cand_tiles, with_scores: bool):
+        """One ``segmented_decode_and`` call per bit-width bucket present in
+        the work-list (plus, with scores, one ``topk.unpack_codes`` call for
+        the bucket's packed score column): the shared body of the AND and
+        ranked fused rounds — grouping, n=0 bucket padding, and stats live
+        here exactly once."""
+        sa = self.ensure_scores().scores if with_scores else None
+        groups: dict = {}
+        for qs, t, bi in pairs:
+            bw, row = self._pk_slot[(t, int(bi))]
+            groups.setdefault(bw, []).append(
+                (qs, row, sa.slot[(t, int(bi))] if with_scores else 0))
+        parts: list = [[] for _ in range(4)]        # ids, hits, codes, qs
+        for bw, items in groups.items():
+            pk = self._pk[bw]
+            rows = np.asarray([r for _, r, _ in items], np.int64)
+            cols = [rows.astype(np.int32),
+                    np.asarray([q for q, _, _ in items], np.int32),
+                    np.asarray([s for _, _, s in items], np.int32),
+                    pk["first"][rows], pk["n"][rows]]
+            w = _bucket(len(items))
+            if len(items) < w:   # pad: repeated entries with n=0 hit nothing
+                pad = w - len(items)
+                cols = [np.concatenate([c, np.repeat(c[:1], pad)]) for c in cols]
+                cols[4][-pad:] = 0
+            slots, qs, sslots, firsts, ns = cols
+            ids, hits = intersect_rounds.segmented_decode_and(
+                pk["tiles"], jnp.asarray(slots), jnp.asarray(qs),
+                jnp.asarray(firsts), jnp.asarray(ns), cand_tiles,
+                bw=bw, crows=self._cand_rows)
+            parts[0].append(ids.reshape(w, -1))
+            parts[1].append(hits.reshape(w, -1))
+            if with_scores:
+                codes = topk.unpack_codes(sa.tiles, jnp.asarray(sslots))
+                parts[2].append(codes.reshape(w, -1))
+            parts[3].append(qs)
+            self.stats["fused_calls"] += 1
+            self.stats["fused_blocks"] += len(items)
+        cat = (lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
+        return (cat(parts[0]), cat(parts[1]),
+                cat(parts[2]) if with_scores else None,
+                np.concatenate(parts[3]) if len(parts[3]) > 1 else parts[3][0])
+
     def fused_round(self, pairs: list, cand_tiles):
         """Segmented fused decode + probe for one device-resident AND round.
 
@@ -388,39 +441,19 @@ class DeviceArena:
             probing its own query's candidate tile block.
         cand_tiles: (Q * _cand_rows, 128) uint32 — the segmented bitmap.
 
-        One ``kernels/intersect_rounds.segmented_decode_and`` call per
-        bit-width bucket present; returns (ids, hits, qslots) device/host
-        arrays of matching leading length, ready for the survivor scatter.
-        The decoded ids and hit masks never touch the host.
+        Returns (ids, hits, qslots) device/host arrays of matching leading
+        length, ready for the survivor scatter.  The decoded ids and hit
+        masks never touch the host.
         """
-        groups: dict = {}
-        for qs, t, bi in pairs:
-            bw, row = self._pk_slot[(t, int(bi))]
-            groups.setdefault(bw, []).append((qs, row))
-        ids_parts, hit_parts, qs_parts = [], [], []
-        for bw, items in groups.items():
-            pk = self._pk[bw]
-            rows = np.asarray([r for _, r in items], np.int64)
-            slots = rows.astype(np.int32)
-            qs = np.asarray([q for q, _ in items], np.int32)
-            firsts = pk["first"][rows]
-            ns = pk["n"][rows]
-            w = _bucket(len(items))
-            if len(items) < w:   # pad: repeated entries with n=0 hit nothing
-                pad = w - len(items)
-                slots = np.concatenate([slots, np.repeat(slots[:1], pad)])
-                qs = np.concatenate([qs, np.repeat(qs[:1], pad)])
-                firsts = np.concatenate([firsts, np.repeat(firsts[:1], pad)])
-                ns = np.concatenate([ns, np.zeros(pad, np.int32)])
-            ids, hits = intersect_rounds.segmented_decode_and(
-                pk["tiles"], jnp.asarray(slots), jnp.asarray(qs),
-                jnp.asarray(firsts), jnp.asarray(ns), cand_tiles,
-                bw=bw, crows=self._cand_rows)
-            ids_parts.append(ids.reshape(w, -1))
-            hit_parts.append(hits.reshape(w, -1))
-            qs_parts.append(qs)
-            self.stats["fused_calls"] += 1
-            self.stats["fused_blocks"] += len(items)
-        cat = (lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
-        return (cat(ids_parts), cat(hit_parts),
-                np.concatenate(qs_parts) if len(qs_parts) > 1 else qs_parts[0])
+        ids, hits, _, qs = self._fused_rounds(pairs, cand_tiles, False)
+        return ids, hits, qs
+
+    def fused_round_scored(self, pairs: list, cand_tiles):
+        """Segmented fused decode + probe + score-unpack for one ranked
+        round: like :meth:`fused_round` but each work-list entry also runs
+        its block's packed score words through the ``kernels/topk`` Pallas
+        unpack tile, so the engine can scatter ``codes * hits`` straight into
+        the segmented accumulator.  Returns (ids, hits, codes, qslots); the
+        decoded ids, hit masks, and codes never touch the host.
+        """
+        return self._fused_rounds(pairs, cand_tiles, True)

@@ -31,6 +31,17 @@ hardware-speed along three axes:
      segmented Pallas kernel instead: unpack + d-gap prefix sum + per-query
      bitmap probe in VMEM, with both the gap tile and the query's candidate
      tile DMA double-buffered.  Results are bit-identical to the host path.
+  5. **Device-resident ranked top-k** — ``or`` / ``and_scored`` batches
+     accumulate u8-quantized BM25 impact codes (``repro.index.scores``: one
+     packed score column per posting block, next to the docid streams) into
+     a segmented device score buffer across rounds (``kernels/topk``), with
+     OR work-lists block-max pruned against a static per-query threshold
+     before any decode and ``and_scored`` gated by the AND-result bitmap
+     that never left the device.  The single download per batch is the
+     compacted candidate bitmap (k-th quantized sum minus the quantization
+     margin — a provable superset of the float top-k), rescored exactly by
+     the block-lazy float oracle: results are bitwise identical to the host
+     BM25 path, ties broken by ascending docid.
 
 Execution is planned, then run: ``engine.plan(batch)`` resolves *once* where
 the batch runs (placement: host / device / fused) and what every referenced
@@ -55,6 +66,7 @@ fused=True)`` maps to ``to_device(fused=True)``; the one-shot helpers in
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import warnings
 from collections import OrderedDict
 from typing import Mapping, Optional
@@ -63,11 +75,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
-from repro.kernels import intersect, intersect_rounds
+from repro.kernels import intersect, intersect_rounds, topk
 from .device import _bucket     # one shared jit-bucket policy with the arena
 from .invindex import InvertedIndex
-
-K1, B = 1.2, 0.75
+from .scores import B, K1, bm25_scores, topk_select  # noqa: F401  (B/K1 re-export)
 
 # plan-time auto-placement: below this batch size the host numpy path beats
 # the device round machinery (BENCH_query.json, batch=1: 14.0k host vs 3.3k
@@ -155,6 +166,17 @@ MODES = ("and", "or", "and_scored")
 PLACEMENTS = ("host", "device", "fused")
 
 
+def _check_mode(mode) -> None:
+    """Reject unknown batch modes with the registry's nearest-name
+    convention (``codec.get``): list what exists, suggest what was meant."""
+    if mode in MODES:
+        return
+    near = difflib.get_close_matches(str(mode), MODES, n=1)
+    hint = f" (did you mean {near[0]!r}?)" if near else ""
+    raise ValueError(
+        f"unknown query mode {mode!r}{hint}; modes: {', '.join(MODES)}")
+
+
 @dataclasses.dataclass(frozen=True)
 class TermCaps:
     """One term's execution capabilities, resolved once at plan time from the
@@ -202,16 +224,23 @@ class QueryEngine:
         self.idx = idx
         self.cache = BlockCache(cache_blocks)
         self.score_cache = BlockCache(cache_score_terms)
-        self._avdl = float(np.asarray(idx.doclen).mean()) if idx.n_docs else 1.0
+        self._avdl = idx.avdl
         self.arena = None
         self._fused = fused
         # resident_rounds: AND rounds executed with candidates device-resident
         # cand_syncs: per-round candidate downloads (legacy device loop only;
         #   the resident path never syncs between rounds)
         # final_syncs: end-of-batch result downloads (one per resident batch)
+        # score_rounds / score_syncs: ranked accumulate rounds executed
+        #   device-resident / per-round score downloads (always 0 on the
+        #   resident ranked path — only the final candidate bitmap syncs)
+        # blocks_pruned / blocks_scored: ranked (term, block) work-list
+        #   entries dropped by the block-max upper-bound test vs. scattered
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
                           "fallback_decodes": 0, "resident_rounds": 0,
-                          "cand_syncs": 0, "final_syncs": 0}
+                          "cand_syncs": 0, "final_syncs": 0,
+                          "score_rounds": 0, "score_syncs": 0,
+                          "blocks_pruned": 0, "blocks_scored": 0}
         if device or fused:
             # deprecated: construct with defaults and call to_device() instead
             warnings.warn(
@@ -464,9 +493,43 @@ class QueryEngine:
                 self.cache.put((e[0], e[1], 2), (row, n))
         return out
 
+    def _stack_worklist(self, entries: list):
+        """Shared round discipline for the resident AND and ranked paths:
+        dedupe a round's (qslot, term, block) entries, decode the unique
+        (term, block) rows once (``_round_rows``), and fan them out to the
+        entries with one device gather, padded to the jit bucket (padding
+        repeats entry 0 with n=0, which scatters nothing).  Returns
+        (rows, qslots, ns, bucket)."""
+        pairs = [(t, bi) for _, t, bi in entries]
+        rows = self._round_rows(pairs)
+        ent = list(rows)
+        ent_row = {e: j for j, e in enumerate(ent)}
+        mat = (rows[ent[0]][0][None] if len(ent) == 1
+               else jnp.stack([rows[e][0] for e in ent]))
+        p = _bucket(len(entries))
+        sel = np.zeros(p, np.int64)
+        sel[:len(entries)] = [ent_row[e] for e in pairs]
+        qs = np.zeros(p, np.int32)
+        qs[:len(entries)] = [q for q, _, _ in entries]
+        ns = np.zeros(p, np.int32)
+        ns[:len(entries)] = [rows[e][1] for e in pairs]
+        return mat[jnp.asarray(sel)], qs, ns, p
+
     def _and_many_resident(self, queries: list,
                            terms: Mapping[int, TermCaps] | None = None,
                            use_fused: bool = False) -> list:
+        """AND the batch device-resident; the single host copy turns the
+        final bitmaps into sorted docid arrays (``_and_bitmap_resident``
+        keeps everything before that copy on device — the ``and_scored``
+        path consumes the bitmap directly and never downloads it)."""
+        bm, _, _ = self._and_bitmap_resident(queries, terms, use_fused)
+        self.dev_stats["final_syncs"] += 1
+        return intersect_rounds.extract_ids(np.asarray(bm)[:len(queries)],
+                                            self.idx.n_docs)
+
+    def _and_bitmap_resident(self, queries: list,
+                             terms: Mapping[int, TermCaps] | None = None,
+                             use_fused: bool = False):
         """AND the batch with candidates device-resident across rounds.
 
         Round 0 scatters every query's rarest term into its row of a
@@ -480,15 +543,18 @@ class QueryEngine:
         Under ``use_fused`` the rounds run the segmented Pallas
         decode+probe kernel over the packed gap tiles instead.
 
-        Results are bit-identical to ``and_query`` per query.
+        Returns (bitmap, qterms, cov) — the (nqp, words) device bitmap, the
+        per-query known terms sorted rarest-first, and the per-query seed
+        coverage intervals (for further static block selection).  Results
+        are bit-identical to ``and_query`` per query.
         """
         idx = self.idx
         nq = len(queries)
+        words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         if nq == 0:
-            return []
+            return jnp.zeros((0, words), jnp.uint32), [], {}
         qterms = [sorted((t for t in q if t in idx.terms),
                          key=lambda t: idx.terms[t].df) for q in queries]
-        words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         nqp = _bucket(nq)
         bm = jnp.zeros((nqp, words), jnp.uint32)
 
@@ -501,22 +567,9 @@ class QueryEngine:
                 # their intersections are simply empty
                 return jnp.where(jnp.asarray(active)[:, None],
                                  jnp.uint32(0), bm)
-            rows = self._round_rows([(t, bi) for _, t, bi in pairs])
-            # stack once per unique entry, then fan out to pairs with one
-            # device gather — shared hot blocks are not re-stacked per query
-            ent = list(rows)
-            ent_row = {e: k for k, e in enumerate(ent)}
-            mat = (rows[ent[0]][0][None] if len(ent) == 1
-                   else jnp.stack([rows[e][0] for e in ent]))
-            p = _bucket(len(pairs))
-            sel = np.zeros(p, np.int64)
-            sel[:len(pairs)] = [ent_row[(t, bi)] for _, t, bi in pairs]
-            qs = np.zeros(p, np.int32)
-            qs[:len(pairs)] = [q for q, _, _ in pairs]
-            ns = np.zeros(p, np.int32)
-            ns[:len(pairs)] = [rows[(t, bi)][1] for _, t, bi in pairs]
+            rows, qs, ns, _ = self._stack_worklist(pairs)
             return intersect_rounds.bitmap_round(
-                bm, mat[jnp.asarray(sel)], jnp.asarray(qs), jnp.asarray(ns),
+                bm, rows, jnp.asarray(qs), jnp.asarray(ns),
                 jnp.asarray(active), probe=probe)
 
         # round 0: seed every query's bitmap row with its rarest term
@@ -563,9 +616,7 @@ class QueryEngine:
                 bm = scatter([], fused_q, probe=True)
             r += 1
 
-        # the single host copy: final bitmaps -> sorted docid arrays
-        self.dev_stats["final_syncs"] += 1
-        return intersect_rounds.extract_ids(np.asarray(bm)[:nq], idx.n_docs)
+        return bm, qterms, cov
 
     def and_query(self, terms: list) -> np.ndarray:
         terms = sorted((t for t in terms if t in self.idx.terms),
@@ -589,11 +640,8 @@ class QueryEngine:
         v = self.score_cache.get(t)
         if v is None:
             ids, tfs = self.term_ids(t), self.term_tfs(t)
-            df = self.idx.terms[t].df
-            idf = np.log(1.0 + (self.idx.n_docs - df + 0.5) / (df + 0.5))
-            dl = self.idx.doclen[ids]
-            tf = tfs.astype(np.float64)
-            sc = idf * tf * (K1 + 1) / (tf + K1 * (1 - B + B * dl / self._avdl))
+            sc = bm25_scores(tfs, self.idx.doclen[ids], self.idx.terms[t].df,
+                             self.idx.n_docs, self._avdl)
             v = (ids, self._freeze(sc))
             self.score_cache.put(t, v)
         return v
@@ -609,28 +657,178 @@ class QueryEngine:
             return []
         tot = np.zeros(len(docs))
         np.add.at(tot, inv, sc)
-        k = min(k, len(docs))
-        top = np.argpartition(-tot, k - 1)[:k]
-        top = top[np.argsort(-tot[top], kind="stable")]
-        return [(int(docs[i]), float(tot[i])) for i in top]
+        return topk_select(docs, tot, k)
 
     def _score_docs(self, terms: list, docs: np.ndarray, k: int) -> list:
+        """The host float top-k oracle: exact BM25 over ``docs`` (term-level
+        score vectors through the score cache), selected with the shared
+        argpartition + docid-tiebreak rule (:func:`repro.index.scores
+        .topk_select`)."""
         if len(docs) == 0:
             return []
         scores = np.zeros(len(docs))
         for t in terms:
-            if t not in self.idx.terms:
-                continue
+            if t not in self.idx.terms or not self.idx.terms[t].blocks:
+                continue            # unknown or zero-posting term scores 0
             ids, sc = self.term_scores(t)
             pos = np.searchsorted(ids, docs)
             pos = np.clip(pos, 0, len(ids) - 1)
             hit = ids[pos] == docs
             scores += np.where(hit, sc[pos], 0.0)
-        order = np.argsort(-scores)[:k]
-        return [(int(docs[i]), float(scores[i])) for i in order]
+        return topk_select(docs, scores, k)
+
+    def _score_docs_blockwise(self, terms: list, docs: np.ndarray,
+                              k: int) -> list:
+        """Exact float rescore touching only the blocks that hold ``docs``
+        (the ranked device path's final stage: candidates are few, so whole
+        -term decodes would waste the pruning win).  Bitwise identical to
+        :meth:`_score_docs` — same float formula (``bm25_scores``), same
+        per-doc term accumulation order, same tie rule."""
+        if len(docs) == 0:
+            return []
+        idx = self.idx
+        scores = np.zeros(len(docs))
+        plans = []
+        prefetch = []
+        for t in terms:
+            if t not in idx.terms or not idx.terms[t].blocks:
+                continue            # unknown or zero-posting term scores 0
+            firsts = idx.block_firsts(t)
+            bi = np.searchsorted(firsts, docs, side="right") - 1
+            bi = np.where(idx.block_lasts(t)[np.maximum(bi, 0)] >=
+                          docs.astype(np.int64), bi, -1)
+            plans.append((t, bi))
+            if self.arena is not None:
+                prefetch.extend((t, int(b), f)
+                                for b in np.unique(bi[bi >= 0]) for f in (0, 1))
+        if prefetch:
+            self._prefetch_blocks(prefetch)
+        for t, bi in plans:
+            df = idx.terms[t].df
+            for b in np.unique(bi[bi >= 0]):
+                sel = np.flatnonzero(bi == b)
+                ids, tfs = self.decode_block(t, int(b))
+                pos = np.searchsorted(ids, docs[sel])
+                pos = np.clip(pos, 0, len(ids) - 1)
+                hit = ids[pos] == docs[sel]
+                sub = sel[hit]
+                sc = bm25_scores(tfs[pos[hit]], idx.doclen[docs[sub]], df,
+                                 idx.n_docs, self._avdl)
+                scores[sub] += sc
+        return topk_select(docs, scores, k)
 
     def and_query_scored(self, terms: list, k: int = 10):
         return self._score_docs(terms, self.and_query(terms), k)
+
+    # ---- device-resident ranked top-k (OR / and_scored) --------------------- #
+
+    def _prune_ranked_blocks(self, sa, occs: list, r: int,
+                             theta0: int) -> tuple:
+        """Block-max prune for occurrence ``r`` of an OR query's term list:
+        drop blocks whose upper bound — own block-max plus every other
+        occurrence's max code over the block's docid range (BMW-style
+        aligned bounds, 0 when the other term has no posting there) plus the
+        quantization margin — cannot beat ``theta0``.  Dropped blocks only
+        lose contributions of docs provably outside the true top-k (see
+        ``repro/index/scores.py``)."""
+        t = occs[r]
+        nb = self.idx.n_blocks(t)
+        if theta0 <= 0 or nb == 0:
+            return np.arange(nb), 0
+        firsts = self.idx.block_firsts(t)
+        lasts = self.idx.block_lasts(t)
+        base = sa.slot[(t, 0)]          # a term's slots are contiguous
+        ub = sa.block_max[base:base + nb].astype(np.int64) + len(occs)
+        for t2 in occs[:r] + occs[r + 1:]:
+            ub += sa.range_max_many(t2, firsts, lasts)
+        keep = np.flatnonzero(ub > theta0)
+        return keep, nb - len(keep)
+
+    def _ranked_resident(self, queries: list, k: int, mode: str,
+                         terms: Mapping[int, TermCaps] | None = None,
+                         use_fused: bool = False) -> list:
+        """Ranked top-k with scores device-resident across rounds.
+
+        Round r scatters every query's r-th strongest term occurrence
+        (quantized impact codes next to the decoded docid rows) into a
+        segmented score accumulator (``kernels/topk``) — for ``and_scored``
+        gated by the AND-result bitmap, which itself never left the device
+        (``_and_bitmap_resident``).  OR work-lists are block-max pruned
+        against the static per-query threshold theta0 before any decode.
+        The single host copy per batch is the compacted candidate bitmap
+        (k-th quantized sum minus the quantization margin — a provable
+        superset of the float top-k), which the block-lazy float oracle
+        rescores exactly: results are bitwise identical to the host path,
+        ties broken by ascending docid.
+        """
+        idx = self.idx
+        nq = len(queries)
+        if nq == 0:
+            return []
+        self.arena.ensure_scores()
+        sa = self.arena.scores
+        known = [[t for t in q if t in idx.terms] for q in queries]
+        if k <= 0 or not any(known):
+            return [[] for _ in queries]
+        words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
+        nqp = _bucket(nq)
+        width = topk.accum_width(idx.n_docs)
+        acc = jnp.zeros((nqp, width), jnp.uint32)
+        member = jnp.zeros((nqp, words), jnp.uint32)
+        gate = cov = None
+        if mode == "and_scored":
+            gate, _, cov = self._and_bitmap_resident(queries, terms, use_fused)
+        gate_tiles = None
+        if use_fused:       # the probe target of the fused rounds: the AND
+            # bitmap, or (OR mode) all-ones so only lane validity gates
+            gate_tiles = (gate if gate is not None else
+                          jnp.full((nqp, words), jnp.uint32(0xFFFFFFFF))
+                          ).reshape(nqp * crows, -1)
+        order = [sorted(ts, key=lambda t: -sa.term_max[t]) for ts in known]
+        margins = np.zeros(nqp, np.int32)
+        margins[:nq] = [len(ts) for ts in known]
+        theta0 = [sa.theta0(ts, k) if mode == "or" else 0 for ts in known]
+        for r in range(max((len(ts) for ts in order), default=0)):
+            plain, fused_pairs = [], []
+            for i in range(nq):
+                ts = order[i]
+                if len(ts) <= r or (cov is not None and i not in cov):
+                    continue        # done, or AND seed empty -> nothing scores
+                t = ts[r]
+                if mode == "or":
+                    sel, pruned = self._prune_ranked_blocks(sa, ts, r, theta0[i])
+                else:
+                    sel, pruned = self._select_blocks_static(t, *cov[i]), 0
+                self.dev_stats["blocks_pruned"] += pruned
+                self.dev_stats["blocks_scored"] += len(sel)
+                f = use_fused and (terms[t].fused if terms is not None
+                                   else self.arena.has_fused(t, sel))
+                (fused_pairs if f else plain).extend(
+                    (i, t, int(bi)) for bi in sel)
+            self.dev_stats["score_rounds"] += 1
+            if plain:
+                rows, qs, ns, p = self._stack_worklist(plain)
+                pairs = [(t, bi) for _, t, bi in plain]
+                codes = sa.rows(pairs + [pairs[0]] * (p - len(pairs)))
+                acc, member = topk.score_round(
+                    acc, member, rows, jnp.asarray(qs), codes,
+                    jnp.asarray(ns), gate if gate is not None else member,
+                    gated=gate is not None)
+            if fused_pairs:
+                ids, hits, codes, qs = self.arena.fused_round_scored(
+                    fused_pairs, gate_tiles)
+                acc, member = topk.score_round_masked(
+                    acc, member, ids.reshape(len(qs), -1), jnp.asarray(qs),
+                    codes.reshape(len(qs), -1), hits.reshape(len(qs), -1))
+        theta = topk.topk_threshold(acc, min(k, width))
+        cand_bm = topk.candidate_bitmap(acc, member, theta,
+                                        jnp.asarray(margins))
+        # the single host copy: candidate bitmaps -> exact float rescore
+        self.dev_stats["final_syncs"] += 1
+        cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
+                                            idx.n_docs)
+        return [self._score_docs_blockwise(q, c, k)
+                for q, c in zip(queries, cand)]
 
     # ---- planned execution -------------------------------------------------- #
 
@@ -640,8 +838,7 @@ class QueryEngine:
         plus every referenced term's codec capabilities, read once from the
         codec registry's declarations.  ``execute(plan)`` then runs with no
         per-codec or per-flag branching."""
-        if batch.mode not in MODES:
-            raise KeyError(batch.mode)
+        _check_mode(batch.mode)
         placement = ("fused" if self.arena is not None and self._fused else
                      "device" if self.arena is not None else "host")
         note = ""
@@ -682,8 +879,7 @@ class QueryEngine:
         if isinstance(work, QueryBatch):
             work = self.plan(work)
         plan: ExecutionPlan = work
-        if plan.mode not in MODES:
-            raise KeyError(plan.mode)
+        _check_mode(plan.mode)
         if plan.placement != "host" and self.arena is None:
             raise ValueError(
                 f"plan placement {plan.placement!r} needs device arenas; call "
@@ -719,10 +915,5 @@ class QueryEngine:
         fused = plan.placement == "fused"
         if plan.mode == "and":
             return self._and_many_resident(queries, plan.terms, fused)
-        if plan.mode == "and_scored":
-            docs = self._and_many_resident(queries, plan.terms, fused)
-            self._prefetch_terms({t for q in queries for t in q})
-            return [self._score_docs(q, d, plan.k)
-                    for q, d in zip(queries, docs)]
-        self._prefetch_terms({t for q in queries for t in q})
-        return [self.or_query(q, plan.k) for q in queries]
+        return self._ranked_resident(queries, plan.k, plan.mode,
+                                     plan.terms, fused)

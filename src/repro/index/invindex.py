@@ -34,6 +34,7 @@ class TermPostings:
     df: int
     blocks: list                   # list of (first_docid, enc_gaps, enc_tfs)
     lasts: np.ndarray = None       # last docid per block (skip upper bounds)
+    impact_bmax: np.ndarray = None  # max float BM25 impact per block (WAND)
 
     def nbytes(self) -> int:
         # + 4 per block for the last-docid column next to the skip pointer
@@ -47,14 +48,31 @@ class InvertedIndex:
     n_docs: int
     doclen: np.ndarray
 
+    @property
+    def avdl(self) -> float:
+        """Mean document length — THE value every BM25 site uses (scorer,
+        quantizer, rescore): one cached implementation so their floats
+        cannot drift apart."""
+        a = getattr(self, "_avdl", None)
+        if a is None:
+            a = float(np.asarray(self.doclen).mean()) if self.n_docs else 1.0
+            self._avdl = a
+        return a
+
     @staticmethod
     def build(doclen: np.ndarray, postings: dict, codec: str = "group_simple") -> "InvertedIndex":
+        from .scores import bm25_scores   # local: scores sits above invindex
         spec = codec_lib.get(codec)
         short = codec_lib.get(SHORT_CODEC)
-        terms = {}
+        doclen = np.asarray(doclen)
+        n_docs = len(doclen)
+        # built empty-first so the impact tables read the one cached avdl
+        idx = InvertedIndex(codec, {}, n_docs, doclen)
+        avdl = idx.avdl
+        terms = idx.terms
         for t, (docids, tfs) in postings.items():
             use = spec if len(docids) >= SHORT else short
-            blocks, lasts = [], []
+            blocks, lasts, bmax = [], [], []
             for i in range(0, len(docids), SKIP):
                 ids = docids[i:i + SKIP]
                 gaps = dgap_encode_np(ids)
@@ -62,9 +80,14 @@ class InvertedIndex:
                 gaps[0] = 0                      # first docid kept in the skip entry
                 blocks.append((int(ids[0]), use.encode(gaps), use.encode(tfs[i:i + SKIP])))
                 lasts.append(int(ids[-1]))
+                # WAND block-max metadata, from the raw postings (no decode)
+                sc = bm25_scores(tfs[i:i + SKIP], doclen[ids], len(docids),
+                                 n_docs, avdl)
+                bmax.append(float(sc.max(initial=0.0)))
             terms[t] = TermPostings(len(docids), blocks,
-                                    np.asarray(lasts, np.int64))
-        return InvertedIndex(codec, terms, len(doclen), np.asarray(doclen))
+                                    np.asarray(lasts, np.int64),
+                                    np.asarray(bmax, np.float64))
+        return idx
 
     def to_device(self, build_fused: bool = True):
         """Flatten the compressed blocks into device-resident arenas
@@ -97,6 +120,23 @@ class InvertedIndex:
                 [int(self.decode_block_ids(t, bi)[-1])
                  for bi in range(len(tp.blocks))], np.int64)
         return tp.lasts
+
+    def impact_block_max(self, t: int) -> np.ndarray:
+        """WAND metadata: max float BM25 impact per block of term t.  Stored
+        at build time (computed from the raw postings); reconstructed once
+        (and cached) from a decode pass for hand-assembled indexes."""
+        tp = self.terms[t]
+        if tp.impact_bmax is None or len(tp.impact_bmax) != len(tp.blocks):
+            from .scores import bm25_scores
+            doclen = np.asarray(self.doclen)
+            out = []
+            for bi in range(len(tp.blocks)):
+                ids, tfs = self.decode_block(t, bi)
+                sc = bm25_scores(tfs, doclen[ids], tp.df, self.n_docs,
+                                 self.avdl)
+                out.append(float(sc.max(initial=0.0)))
+            tp.impact_bmax = np.asarray(out, np.float64)
+        return tp.impact_bmax
 
     def decode_block_ids(self, t: int, bi: int) -> np.ndarray:
         """Decompress only the docids of one block (AND queries skip TFs)."""

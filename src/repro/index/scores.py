@@ -1,0 +1,243 @@
+"""Quantized impact score arenas: BM25 impacts as a device-resident column.
+
+The ranked modes (``or`` / ``and_scored``) were the engine's last scalar
+holdout: BM25 was recomputed per term on cache miss, merged on host, and
+full-sorted with ``np.argsort``.  This module gives the ranked path the same
+treatment the docid streams got — per-(term, doc) impacts quantized to u8 and
+packed as an additional named arena column per posting block, plus the
+block-max metadata a WAND/BMW-style top-k needs:
+
+  * **global-max scalar quantization** — one scale for the whole index:
+    ``delta = global_max_impact / 255`` and ``code = floor(impact / delta)``
+    (clipped to 255).  Floor is *monotone*, so equal float impacts always map
+    to equal codes and ``max(codes of a block) == floor(block_max / delta)``
+    — the stored block-max tables are exactly the maxima of the stored codes
+    (the registry lint cross-checks this).
+  * **score column** — each block's <= 512 codes packed four-per-word into a
+    fixed 128-word uint32 stream (:data:`SCORE_COLUMN`, the same padded
+    ``ArenaColumn`` contract the codec arenas declare: value ``i`` lives in
+    word ``i % 128``, bits ``8 * (i // 128)`` — the bw=8 case of
+    ``decode_fused.pack_gaps``), concatenated into one ``(S, 128)`` device
+    arena aligned with the block slots.
+  * **block-max / term-max / top-impact tables** — per (term, block) the max
+    code, per term the max code and its top-:data:`TOP_TABLE` codes sorted
+    descending.  ``InvertedIndex.build`` precomputes the float form of the
+    block/term maxima from the raw postings (before compression); hand-built
+    indexes reconstruct them here from a decode pass.
+
+Quantization-rank parity contract
+---------------------------------
+Quantized ranks need not equal float ranks; exactness is restored by a
+*candidate margin*.  For a query with ``m`` (known) term occurrences and a
+doc matching with quantized sum ``C``, the true score ``S`` satisfies
+
+    C * delta <= S < (C + m) * delta                      (floor, per term)
+
+so (1) the k-th largest quantized sum ``theta`` lower-bounds the k-th best
+true score by ``theta * delta``, and (2) any doc of the true top-k must have
+``C > theta - m``.  The device path therefore syncs the candidate set
+``{C >= theta - m}`` (as a bitmap, one copy per batch) and rescores it with
+the exact float oracle — top-k sets and scores match the host float-BM25
+path bitwise, with ties broken by ascending docid (:func:`topk_select`).
+The same bound makes block-max pruning sound: a (term, block) work-list
+entry whose upper bound ``block_max + sum(other term maxima) + m`` cannot
+reach a static threshold (``theta0``, the k-th top impact of the query's
+strongest term — k docs provably score at least that) only loses
+contributions of docs that are provably outside the true top-k.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import ARENA_BLOCK, ArenaColumn
+from repro.kernels.decode_fused import pack_gaps
+
+K1, B = 1.2, 0.75
+
+CODE_MAX = 255                    # u8 quantization ceiling
+TOP_TABLE = 32                    # per-term top-impact codes kept for theta0
+SCORE_WORDS = ARENA_BLOCK // 4    # 512 codes packed four-per-word
+STRIPE_TARGET = 512               # docid stripes per index for range bounds
+STRIPE_MIN = 32                   # smallest stripe width (docids)
+
+# the score stream as the same named-padded-column contract the codec arenas
+# declare (repro.core.codec.ArenaColumn): fixed width, uint32 words, values
+# masked past the block's dynamic posting count
+SCORE_COLUMN = ArenaColumn("scores", SCORE_WORDS, dtype=np.uint32)
+
+
+# --------------------------------------------------------------------------- #
+# shared float BM25 (the exact oracle — one formula for every path)
+# --------------------------------------------------------------------------- #
+
+
+def bm25_scores(tfs: np.ndarray, dls: np.ndarray, df: int, n_docs: int,
+                avdl: float) -> np.ndarray:
+    """Element-wise float64 BM25 impacts; the host oracle, the quantizer, and
+    the candidate rescore all call exactly this, so their floats are bitwise
+    identical regardless of which slice of a term they score."""
+    idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
+    tf = tfs.astype(np.float64)
+    return idf * tf * (K1 + 1) / (tf + K1 * (1 - B + B * dls / avdl))
+
+
+def topk_select(docs: np.ndarray, scores: np.ndarray, k: int) -> list:
+    """Top-k (docid, score) pairs by descending score, ties broken by
+    ascending docid — the one selection rule of every ranked path.
+
+    ``np.argpartition`` pre-selects the k-th score so the full
+    (-score, docid) lexsort only touches the k best plus their boundary ties
+    (the seed path full-sorted everything with ``np.argsort``).
+    """
+    k = min(k, len(docs))
+    if k <= 0:
+        return []
+    if len(docs) > 2 * k:
+        kth = scores[np.argpartition(-scores, k - 1)[:k]].min()
+        cand = np.flatnonzero(scores >= kth)
+    else:
+        cand = np.arange(len(docs))
+    order = cand[np.lexsort((docs[cand], -scores[cand]))][:k]
+    return [(int(docs[i]), float(scores[i])) for i in order]
+
+
+# --------------------------------------------------------------------------- #
+# the quantized score arena
+# --------------------------------------------------------------------------- #
+
+
+@jax.jit
+def _unpack_rows(tiles: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """Gather + unpack packed score words: (P,) slots -> (P, 512) uint32
+    codes (value i of a block at word i % 128, bits 8 * (i // 128))."""
+    w = tiles[slots]                                    # (P, 128)
+    parts = [(w >> jnp.uint32(8 * r)) & jnp.uint32(0xFF) for r in range(4)]
+    return jnp.stack(parts, axis=1).reshape(slots.shape[0], -1)
+
+
+def unpack_words_np(words: np.ndarray, n: int) -> np.ndarray:
+    """Host-side unpack of one block's packed score words (lint/tests)."""
+    w = np.asarray(words, np.uint32)
+    out = np.stack([(w >> np.uint32(8 * r)) & np.uint32(0xFF)
+                    for r in range(4)]).reshape(-1)
+    return out[:n]
+
+
+class ScoreArena:
+    """Device-resident quantized impact scores for one ``InvertedIndex``.
+
+    tiles:     (S, 128) uint32 device arena — slot s holds block s's packed
+               codes (:data:`SCORE_COLUMN` layout).
+    block_max: (S,) int32 — max code per slot (== max of the stored codes).
+    slot:      {(term, block) -> s}.
+    term_max:  {term -> int} max code over the term.
+    term_tops: {term -> int32[<=TOP_TABLE]} top codes sorted descending.
+    stripes:   {term -> int32[n_stripes]} max code per fixed docid stripe of
+               ``stripe_width`` docids — the range bound for block-max
+               pruning.  Posting blocks of a sparse term span the whole
+               docid space, so block granularity cannot localize it; the
+               stripe table is keyed by *docid*, so a range where the term
+               has no posting bounds to 0.
+    delta:     the quantization scale (global max impact / 255).
+    """
+
+    def __init__(self, idx):
+        self.idx = idx
+        n_docs = idx.n_docs
+        doclen = np.asarray(idx.doclen)
+        avdl = idx.avdl
+        # pass 1: float impacts per block (build-time tables give the global
+        # max without decoding; hand-assembled indexes reconstruct lazily)
+        gmax = 0.0
+        for t in idx.terms:
+            gmax = max(gmax, float(idx.impact_block_max(t).max(initial=0.0)))
+        self.gmax = gmax
+        self.delta = (gmax / CODE_MAX) if gmax > 0 else 1.0
+        # docid stripes sized for ~STRIPE_TARGET range-bound cells per index
+        self.stripe_width = max(STRIPE_MIN, -(-n_docs // STRIPE_TARGET))
+        n_stripes = max(1, -(-n_docs // self.stripe_width))
+        # pass 2: quantize per-posting impacts into the packed column
+        tiles, bmax = [], []
+        self.slot: dict = {}
+        self.term_max: dict = {}
+        self.term_tops: dict = {}
+        self.stripes: dict = {}
+        for t, tp in idx.terms.items():
+            codes_all = []
+            stripe = np.zeros(n_stripes, np.int32)
+            for bi in range(len(tp.blocks)):
+                ids, tfs = idx.decode_block(t, bi)
+                sc = bm25_scores(tfs, doclen[ids], tp.df, n_docs, avdl)
+                codes = np.minimum(np.floor(sc / self.delta),
+                                   CODE_MAX).astype(np.uint32)
+                self.slot[(t, bi)] = len(tiles)
+                tiles.append(pack_gaps(codes, 8)[0])
+                bmax.append(int(codes.max(initial=0)))
+                codes_all.append(codes)
+                np.maximum.at(stripe, ids // self.stripe_width,
+                              codes.astype(np.int32))
+            cat = (np.concatenate(codes_all) if codes_all
+                   else np.zeros(0, np.uint32))
+            self.term_max[t] = int(cat.max(initial=0))
+            tops = np.sort(cat)[::-1][:TOP_TABLE].astype(np.int32)
+            self.term_tops[t] = tops
+            self.stripes[t] = stripe
+        self.block_max = np.asarray(bmax, np.int32)
+        self.tiles = (jnp.asarray(np.stack(tiles)) if tiles
+                      else jnp.zeros((1, SCORE_WORDS), jnp.uint32))
+
+    @classmethod
+    def from_index(cls, idx) -> "ScoreArena":
+        return cls(idx)
+
+    # ---- device decode ------------------------------------------------------ #
+
+    def rows(self, pairs: list) -> jnp.ndarray:
+        """Decode a work-list of (term, block) score entries WITHOUT a host
+        copy: (len(pairs), 512) uint32 code rows, zero past each block's
+        posting count (the packing zero-pads)."""
+        slots = np.asarray([self.slot[p] for p in pairs], np.int64)
+        return _unpack_rows(self.tiles, jnp.asarray(slots))
+
+    # ---- WAND metadata ------------------------------------------------------ #
+
+    def theta0(self, terms: list, k: int) -> int:
+        """Static per-query threshold: the k-th top impact code of the
+        query's strongest term — k docs of that term provably reach it, so it
+        lower-bounds the k-th best total (sound for OR; see the module
+        docstring).  0 when no term has k postings or k > TOP_TABLE."""
+        best = 0
+        for t in terms:
+            tops = self.term_tops.get(t)
+            if tops is not None and k <= len(tops):
+                best = max(best, int(tops[k - 1]))
+        return best
+
+    def range_max(self, t: int, lo: int, hi: int) -> int:
+        """Max code of term t over the docid range [lo, hi] — the BMW-style
+        aligned bound, from the stripe table: 0 when the term has no posting
+        in any stripe the range touches."""
+        stripe = self.stripes[t]
+        j0 = lo // self.stripe_width
+        j1 = hi // self.stripe_width + 1
+        return int(stripe[j0:j1].max(initial=0))
+
+    def range_max_many(self, t: int, los: np.ndarray,
+                       his: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`range_max` over per-block [lo, hi] ranges (the
+        prune pass calls this once per other term per round, not per block):
+        segment maxima via ``np.maximum.reduceat`` over the stripe table."""
+        if len(los) == 0:
+            return np.zeros(0, np.int64)
+        j0 = np.asarray(los) // self.stripe_width
+        j1 = np.asarray(his) // self.stripe_width + 1
+        # sentinel keeps every reduceat index in range (j1 can equal the
+        # stripe count); a [j0, j1) segment never reaches it since j1 > j0
+        ext = np.append(self.stripes[t], np.int32(0))
+        idx = np.empty(2 * len(j0), np.int64)
+        idx[0::2] = j0
+        idx[1::2] = j1
+        return np.maximum.reduceat(ext, idx)[0::2].astype(np.int64)

@@ -5,12 +5,15 @@ quadmax (OR pseudo-max, §4.4), scan_add (d-gap decode prefix sum),
 unpack_delta (beyond-paper fused unpack+scan), intersect (vectorized
 galloping + block-skip bitmap intersection for the query engine),
 decode_fused (work-list block decode fused with the candidate bitmap-AND
-for the device-resident serving path).
+for the device-resident serving path), intersect_rounds (segmented
+candidate bitmaps + per-round probe/scatter for device-resident AND),
+topk (segmented quantized score accumulate + threshold-and-compact
+candidate selection + the score-column unpack tile for ranked top-k).
 ops.py holds jit wrappers; ref.py the pure-jnp oracles.
 """
 
-from . import (bitpack, decode_fused, intersect, ops, quadmax, ref, scan_add,
-               unpack_delta)
+from . import (bitpack, decode_fused, intersect, intersect_rounds, ops,
+               quadmax, ref, scan_add, topk, unpack_delta)
 
-__all__ = ["bitpack", "decode_fused", "intersect", "ops", "quadmax", "ref",
-           "scan_add", "unpack_delta"]
+__all__ = ["bitpack", "decode_fused", "intersect", "intersect_rounds", "ops",
+           "quadmax", "ref", "scan_add", "topk", "unpack_delta"]

@@ -1,0 +1,158 @@
+"""Segmented device-resident top-k: quantized score accumulation + threshold
+-and-compact candidate selection for the ranked (OR / and_scored) modes.
+
+The state mirrors ``intersect_rounds``'s segmented candidate bitmaps, with a
+score accumulator next to them:
+
+  * **segmented score accumulator** — ONE (n_queries, n_docs_padded) uint32
+    device array; query q owns row q and accumulates the quantized impact
+    codes (``repro.index.scores``) of its terms, one term occurrence per
+    round, via an exact integer scatter-add.
+  * **membership bitmap** — the same (n_queries, words) packed geometry as
+    the AND candidate bitmaps: a bit per doc that contributed anything
+    (needed because a code can floor to 0 while the float impact is > 0).
+  * ``score_round`` / ``score_round_masked`` — one jitted call per round:
+    every work-list lane scatters its decoded block's codes into its query's
+    accumulator row.  For ``and_scored`` the lanes first probe the AND-result
+    bitmap (``gate``) so only intersection docs accumulate; the fused path
+    arrives with the probe already applied (``hits`` from the segmented
+    Pallas decode) and uses the ``_masked`` form.
+  * ``topk_threshold`` + ``candidate_bitmap`` — the bounded "heap" as
+    iterative threshold-and-compact: the per-query k-th largest accumulated
+    code sum is the threshold theta; the compact keeps every member doc with
+    ``acc >= theta - margin`` (the quantization margin of
+    ``repro.index.scores`` — a provable superset of the true float top-k)
+    packed as a bitmap, which is the batch's single host sync.
+  * ``unpack_codes`` — the Pallas tile for the score side of the fused
+    placement: each grid step DMAs one block's packed (1, 128) score words
+    (slot selected by a scalar-prefetched work-list array, double-buffered
+    like the gap tiles) and shifts/masks them into (4, 128) code tiles —
+    the bw=8 instantiation of the paper's static shift/mask unroll.
+
+Correctness does not depend on work-list selection: scattering a superset of
+blocks is exact (codes of docs outside the gate fail the probe), and pruned
+blocks only drop docs provably outside the top-k (see the parity-contract
+note in ``repro/index/scores.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitpack import LANES, auto_interpret
+from .decode_fused import BLOCK_ROWS
+
+
+def accum_width(n_docs: int) -> int:
+    """Accumulator row width: [0, n_docs) padded to the bitmap geometry of
+    ``intersect_rounds`` (whole 32-bit words, whole 128-lane tiles) so the
+    compacted candidate bitmap packs without a remainder."""
+    from .intersect_rounds import bitmap_geometry
+    return bitmap_geometry(n_docs)[0] * 32
+
+
+def _scatter(acc, member, ids, qslot, codes, surv):
+    """Exact scatter: per round a (query, term occurrence) contributes every
+    docid at most once, so the integer add is a plain sum and the bit add is
+    an exact OR."""
+    contrib = jnp.where(surv, codes, jnp.uint32(0))
+    acc = acc.at[qslot[:, None], ids].add(contrib)
+    word = (ids >> 5).astype(jnp.int32)
+    bits = jnp.where(surv, jnp.uint32(1) << (ids & 31), jnp.uint32(0))
+    mem = jnp.zeros_like(member).at[qslot[:, None], word].add(bits)
+    return acc, member | mem
+
+
+@functools.partial(jax.jit, static_argnames=("gated",))
+def score_round(acc, member, ids, qslot, codes, ns, gate, *, gated: bool):
+    """One ranked round over the whole batch.
+
+    acc:    (Q, width) uint32 — segmented score accumulator (old state).
+    member: (Q, words) uint32 — packed membership bitmap (old state).
+    ids:    (P, out_width) uint32 — decoded docid rows per work-list entry.
+    qslot:  (P,) int32 — owning query row per entry.
+    codes:  (P, out_width) uint32 — quantized impact codes aligned with ids.
+    ns:     (P,) int32 — valid posting count per entry (0 for jit padding).
+    gate:   (Q, words) uint32 — AND-result bitmap; probed when ``gated``
+            (the ``and_scored`` path) so only intersection docs accumulate.
+
+    Returns (acc, member), both still on device.
+    """
+    lane = jnp.arange(ids.shape[1], dtype=jnp.int32)
+    surv = lane[None, :] < ns[:, None]
+    if gated:
+        word = (ids >> 5).astype(jnp.int32)
+        hit = (gate[qslot[:, None], word] >> (ids & 31)) & jnp.uint32(1)
+        surv = surv & (hit == 1)
+    return _scatter(acc, member, ids, qslot, codes, surv)
+
+
+@jax.jit
+def score_round_masked(acc, member, ids, qslot, codes, hits):
+    """Like :func:`score_round` with the probe already applied — ``hits`` is
+    the per-lane survivor mask the fused Pallas decode produced."""
+    return _scatter(acc, member, ids, qslot, codes, hits != 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_threshold(acc, k: int):
+    """Per-query threshold theta: the k-th largest accumulated code sum."""
+    return jax.lax.top_k(acc, k)[0][:, -1]
+
+
+@jax.jit
+def candidate_bitmap(acc, member, theta, margin):
+    """Compact the accumulator against (theta - margin) into a packed
+    candidate bitmap — every member doc whose quantized sum could still reach
+    the true top-k (the provable superset of ``repro/index/scores.py``)."""
+    # int32 is exact here: sums of u8 codes stay far below 2**31
+    thr = theta.astype(jnp.int32) - margin.astype(jnp.int32)
+    keep = acc.astype(jnp.int32) >= thr[:, None]
+    q, width = acc.shape
+    bits = keep.reshape(q, width // 32, 32).astype(jnp.uint32)
+    words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32)
+    return words & member
+
+
+# --------------------------------------------------------------------------- #
+# Pallas score-unpack tile (the fused placement's score side)
+# --------------------------------------------------------------------------- #
+
+
+def _unpack_kernel(slot_ref, tile_ref, out_ref):
+    del slot_ref
+    for r in range(BLOCK_ROWS):
+        out_ref[r, :] = (tile_ref[0, :] >> jnp.uint32(8 * r)) & jnp.uint32(0xFF)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_codes(tiles, slots, interpret=None) -> jnp.ndarray:
+    """Unpack a work-list of packed score tiles in one call.
+
+    tiles: (S, 128) uint32 — the score arena (four codes per word).
+    slots: (W,) int32 — arena row per work-list entry; drives the
+           scalar-prefetched DMA index map exactly like the gap tiles.
+
+    Returns (W * 4, 128) uint32 codes; entry j owns rows [4j, 4j + 4) in the
+    linear order of the docid rows it accompanies.
+    """
+    w = slots.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((1, LANES), lambda i, s: (s[i], 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s: (i, 0)),
+    )
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w * BLOCK_ROWS, LANES), jnp.uint32),
+        interpret=auto_interpret(interpret),
+    )(slots, tiles)

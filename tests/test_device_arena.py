@@ -262,12 +262,16 @@ def test_term_concat_empty_is_frozen_and_consistent():
 
 
 def test_invalid_mode_raises_on_both_paths():
+    """Unknown modes fail with a ValueError that lists MODES and suggests
+    the nearest name (the ``codec.get`` convention), on plan and execute."""
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
     for eng in (QueryEngine(idx), QueryEngine(idx).to_device()):
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError, match="did you mean 'and'"):
             eng.plan(QueryBatch([[0, 1]], mode="And"))
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError, match="and, or, and_scored"):
             eng.execute(QueryBatch([[0, 1]], mode="And"))
+    with pytest.raises(ValueError, match="unknown query mode"):
+        QueryEngine(idx).execute(QueryBatch([[0, 1]], mode="bm25"))
 
 
 def test_fused_arena_buckets_by_block_bit_width():

@@ -133,6 +133,41 @@ def test_engine_cache_reuse_and_eviction_correctness():
         np.testing.assert_array_equal(a, b)
 
 
+def test_score_cache_eviction_and_recompute_on_miss():
+    """cache_score_terms bounds the BM25 score-vector cache: a capacity-1
+    cache under multi-term OR queries must evict, recompute evicted terms on
+    the next miss, and stay exact throughout."""
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    ref = QueryEngine(idx)
+    eng = QueryEngine(idx, cache_score_terms=1)
+    queries = [[5, 9, 7], [9, 5], [7, 9, 5]] * 3
+    want = ref.execute(QueryBatch(queries, mode="or", k=8))
+    got = eng.execute(QueryBatch(queries, mode="or", k=8))
+    assert want == got
+    assert eng.score_cache.evictions > 0
+    assert eng.score_cache.cost_used <= eng.score_cache.capacity
+    # an evicted term recomputes on miss with an identical score vector
+    ids0, sc0 = map(np.copy, eng.term_scores(5))
+    eng.term_scores(9)                      # capacity 1: evicts term 5
+    assert eng.score_cache.get(5) is None   # miss (recorded as such)
+    misses = eng.score_cache.misses
+    ids1, sc1 = eng.term_scores(5)          # recompute path
+    assert eng.score_cache.misses == misses + 1
+    np.testing.assert_array_equal(ids0, ids1)
+    np.testing.assert_array_equal(sc0, sc1)
+    # recomputed vectors serve OR queries exactly
+    assert eng.or_query([5, 9], k=6) == ref.or_query([5, 9], k=6)
+
+
+def test_score_cache_zero_capacity_always_recomputes():
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    eng = QueryEngine(idx, cache_score_terms=0)
+    r1 = eng.or_query([5, 9, 2], k=5)
+    r2 = eng.or_query([5, 9, 2], k=5)
+    assert r1 == r2 == QueryEngine(idx).or_query([5, 9, 2], k=5)
+    assert len(eng.score_cache) == 0 and eng.score_cache.hits == 0
+
+
 def test_zero_posting_term_does_not_crash():
     postings = dict(POSTINGS)
     postings[99] = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))

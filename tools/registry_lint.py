@@ -20,7 +20,12 @@ Checks, per registered codec:
   5. exception-column consistency: a codec whose encoder stores a non-empty
      ``Encoded.exceptions`` patch stream on a heavy-tailed probe round-trip
      MUST declare an ``"exceptions"`` arena column — otherwise its arena
-     decode would silently drop the patches.
+     decode would silently drop the patches;
+  6. score block-max consistency (lint corpus): the ``ScoreArena`` block-max
+     tables the ranked top-k prunes with must equal the max over each
+     block's stored quantized impacts (and the quantized build-time float
+     maxima, and the term-max / stripe range-bound tables) — a drifted
+     table would prune blocks whose docs can still reach the top-k.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -143,12 +148,64 @@ def lint_parity_coverage(errors: list) -> None:
                       f"capability")
 
 
+def lint_score_tables(errors: list) -> None:
+    """WAND metadata soundness on the lint corpus: for every posting block,
+    the stored block-max equals the max of the stored quantized impacts
+    (== the quantized build-time float maximum: floor is monotone), term-max
+    is the max block-max, and the stripe range-bound table dominates every
+    posting's code.  Heavy-tailed postings keep the exception-bearing codecs
+    honest on the same probe."""
+    from repro.index.invindex import InvertedIndex
+    from repro.index.scores import ScoreArena, unpack_words_np
+
+    rng = np.random.default_rng(17)
+    n_docs = 100_000
+    postings = {}
+    for t, df in enumerate([12, 64, 300, 513, 900]):
+        gaps = rng.integers(1, 8, df).astype(np.int64)
+        gaps[rng.random(df) < 0.02] += rng.integers(1 << 8, 1 << 12)
+        ids = np.cumsum(gaps)
+        assert int(ids[-1]) < n_docs
+        postings[t] = (ids.astype(np.uint32),
+                       rng.geometric(0.4, df).astype(np.uint32))
+    doclen = rng.integers(50, 500, n_docs).astype(np.int64)
+    for name in ("group_simple", "group_pfd"):
+        idx = InvertedIndex.build(doclen, postings, codec=name)
+        sa = ScoreArena.from_index(idx)
+        tiles = np.asarray(sa.tiles)
+        for t, tp in idx.terms.items():
+            per_block = []
+            for bi in range(len(tp.blocks)):
+                ids, _ = idx.decode_block(t, bi)
+                s = sa.slot[(t, bi)]
+                codes = unpack_words_np(tiles[s], len(ids))
+                stored = int(sa.block_max[s])
+                per_block.append(stored)
+                if stored != int(codes.max(initial=0)):
+                    _fail(errors, f"{name}: score block-max table "
+                                  f"[{t},{bi}] = {stored} != max stored "
+                                  f"impact {int(codes.max(initial=0))}")
+                built = min(int(idx.impact_block_max(t)[bi] / sa.delta), 255)
+                if stored != built:
+                    _fail(errors, f"{name}: score block-max table "
+                                  f"[{t},{bi}] = {stored} != quantized "
+                                  f"build-time float max {built}")
+                if np.any(sa.stripes[t][ids // sa.stripe_width]
+                          < codes.astype(np.int64)):
+                    _fail(errors, f"{name}: stripe range-bound table "
+                                  f"under-bounds term {t} block {bi}")
+            if sa.term_max[t] != max(per_block, default=0):
+                _fail(errors, f"{name}: term-max table for term {t} "
+                              f"inconsistent with block maxima")
+
+
 def main() -> int:
     errors: list = []
     lint_protocol(errors)
     lint_arena_contract(errors)
     lint_exception_columns(errors)
     lint_parity_coverage(errors)
+    lint_score_tables(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
     print(f"registry lint: {len(codec.names())} codecs "
