@@ -16,6 +16,15 @@ not the headline (jitted gathers vs raw numpy); the tracked guarantee there
 is ``decodes_per_hot_block == 1.0``: each hot (term, block) decodes at most
 once per batch, in O(rounds) device calls instead of O(blocks) Python
 iterations.
+
+``--mutate`` (also run as part of the default suite) exercises the streaming
+mutable index: qps on the device placement at 0% / 1% / 10% tombstone
+density, the compaction pause (one ``compact()`` merge re-encoding the live
+corpus into the next generation), and the delta-segment scan overhead (qps
+with freshly inserted docs pending in the mutable segment vs the compacted
+clean index).  Results go to ``BENCH_mutation.json`` (override with
+``BENCH_MUTATION_JSON``); the tracked CI guarantee is that tombstone gating
+stays resident — ``cand_syncs == 0`` at every density.
 """
 
 from __future__ import annotations
@@ -23,6 +32,7 @@ from __future__ import annotations
 import json
 import os
 import subprocess
+import time
 
 import numpy as np
 import jax
@@ -92,6 +102,7 @@ def run(n_queries: int = 100, dataset: str = "gov2") -> None:
     # batched mode needs enough queries sharing terms to expose cache reuse —
     # keep the canonical 256 except under CI smoke sizing (n_queries <= 20)
     run_batched(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 256)
+    run_mutation(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 128)
 
 
 def run_batched(dataset: str = "gov2", codec: str = "group_simple",
@@ -219,5 +230,95 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
     print(f"# wrote {path}")
 
 
+def run_mutation(dataset: str = "gov2", codec: str = "group_pfd",
+                 n_queries: int = 128) -> None:
+    """Streaming-mutation serving cost: tombstone-gated qps, compaction
+    pause, and delta-segment scan overhead (see the module docstring)."""
+    doclen, postings = synth.make_corpus(dataset)
+    queries = make_queries(postings, n_queries)
+    n_docs = len(doclen)
+    rng = np.random.default_rng(11)
+    report = {"dataset": dataset, "codec": codec, "n_queries": n_queries,
+              "n_docs": n_docs, "backend": jax.default_backend(),
+              "git_sha": git_sha(), "tombstone_qps": {}}
+
+    def measure(idx, tag: str) -> dict:
+        """Device-placement and-mode qps over the whole query set (fresh
+        engine per repeat: the per-epoch live-bitmap upload is part of the
+        serving cost being measured)."""
+        def go():
+            eng = QueryEngine(idx)
+            eng.to_device()
+            for i in range(0, len(queries), 64):
+                eng.execute(eng.plan(QueryBatch(queries[i:i + 64], mode="and")))
+            return eng
+        t = timeit(go, repeats=3, warmup=1)
+        eng = go()   # one extra run for the residency counters
+        stats = {"qps": n_queries / t,
+                 "cand_syncs": eng.dev_stats["cand_syncs"],
+                 "tomb_gates": eng.dev_stats["tomb_gates"]}
+        emit(f"query/{dataset}/{codec}/mutate_{tag}", t * 1e6,
+             f"{n_queries / t:.1f}qps,{stats['cand_syncs']}cand_syncs")
+        return stats
+
+    idx = InvertedIndex.build(doclen, postings, codec=codec)
+    idx.to_device(build_fused=False)
+    report["tombstone_qps"]["0%"] = clean = measure(idx, "tomb_0pct")
+
+    # tombstone density sweep: each step deletes up to the target fraction of
+    # the base doc space; the live bitmap is re-packed once per epoch and the
+    # gate must add zero candidate downloads
+    victims = rng.permutation(n_docs)
+    n_deleted = 0
+    for frac, tag in ((0.01, "1%"), (0.10, "10%")):
+        target = int(n_docs * frac)
+        for d in victims[n_deleted:target]:
+            idx.delete(int(d))
+        n_deleted = target
+        report["tombstone_qps"][tag] = measure(idx, f"tomb_{tag.rstrip('%')}pct")
+
+    # compaction pause: one merge of generation-minus-tombstones through the
+    # codec registry into the next generation (10% of the corpus dead)
+    t0 = time.perf_counter()
+    idx.compact()
+    pause = time.perf_counter() - t0
+    report["compaction_pause_s"] = pause
+    report["compacted_gid"] = idx.gen.gid
+    emit(f"query/{dataset}/{codec}/mutate_compact_pause", pause * 1e6,
+         f"{n_docs - n_deleted}live_docs,gid{idx.gen.gid}")
+
+    # delta-segment scan overhead: fresh docs pending in the mutable segment
+    # are brute-force scanned and merged into every query's result
+    idx.to_device(build_fused=False)
+    report["post_compact_qps"] = measure(idx, "post_compact")
+    terms = sorted(postings)
+    base = idx.doc_space
+    n_delta = max(16, n_docs // 100)
+    for j in range(n_delta):
+        picked = rng.choice(terms[:120], size=8, replace=False)
+        idx.insert(base + j, {int(t): int(rng.integers(1, 5)) for t in picked},
+                   doclen=int(doclen.mean()))
+    delta = measure(idx, "delta_1pct")
+    report["delta_qps"] = delta
+    report["n_delta_docs"] = n_delta
+    report["delta_scan_overhead_x"] = clean["qps"] / max(delta["qps"], 1e-9)
+    emit(f"query/{dataset}/{codec}/mutate_delta_overhead", 0.0,
+         f"{n_delta}delta_docs,{report['delta_scan_overhead_x']:.2f}x")
+
+    path = os.environ.get("BENCH_MUTATION_JSON", "BENCH_mutation.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mutate", action="store_true",
+                    help="only the streaming-mutation suite (BENCH_mutation.json)")
+    ap.add_argument("--n-queries", type=int, default=None)
+    args = ap.parse_args()
+    if args.mutate:
+        run_mutation(n_queries=args.n_queries or 128)
+    else:
+        run(n_queries=args.n_queries or 100)

@@ -34,6 +34,40 @@ Layers (bottom up):
     plans accumulate the codes into a segmented device score buffer
     (``repro.kernels.topk``) and sync one compacted candidate bitmap per
     batch.
+  * ``segments`` — the streaming mutable layer: ``DeltaSegment`` (a small
+    doc-major mutable segment absorbing inserts/upserts) and ``Tombstones``
+    (a versioned dead-docid set with frozen memoized views) sit beside the
+    immutable ``Generation``; ``InvertedIndex`` composes the three into a
+    mutable handle that serves bit-identically to a from-scratch rebuild.
+
+Streaming mutation (insert -> tombstone -> compact -> generation swap):
+``InvertedIndex`` wraps one immutable ``Generation`` (gid-stamped: blocks,
+skip tables, impact tables, and the cached device arena all belong to a
+generation) plus the mutable delta/tombstone pair.  ``insert(docid, terms,
+doclen)`` lands in the delta segment — a docid the generation already holds
+is tombstoned first (the *shadowing invariant*: generation and delta doc
+sets stay disjoint, so result unions are plain sorted merges).  ``delete``
+drops delta copies outright and tombstones base copies (their blocks are
+immutable; serving gates them out).  Serving under mutation pins a frozen
+*epoch* (``(gid, tombstone version, delta version)``) per ``plan()`` /
+``execute()``: generation results are tombstone-filtered (on the resident
+placements via ONE packed live-bitmap AND after the seed round —
+``intersect_rounds.pack_live_words``, one upload per epoch, zero downloads)
+and merged with a brute-force scan of the small delta segment; BM25 stats
+(df, doclen, avdl) are recomputed live per epoch so scores match a rebuild
+bitwise.  Ranked modes under mutation disarm block-max pruning (the
+quantized tables carry generation-time stats) — the candidate superset
+contract still holds, and the exact float rescore restores bit-identity;
+``compact()`` re-arms pruning: it merge-sorts generation-minus-tombstones
+with the delta per term, re-encodes through the codec registry into
+generation ``gid + 1``, and swaps it in atomically — in-flight plans keep
+executing against their pinned generation's arenas (all engine caches are
+keyed by gid / epoch, so nothing stale survives the swap).  The governing
+**rebuild-parity contract**: at any epoch, every mode on every placement is
+bitwise identical to ``InvertedIndex.build(doclen_now(), live_postings)``
+(enforced by the stateful differential harness in ``tests/test_mutation.py``
+and the segment-consistency registry lint; ``BENCH_mutation.json`` tracks
+qps per tombstone density, compaction pause, and delta-scan overhead).
 
 Ranked retrieval (score columns, quantization contract, block-max pruning):
 ``ScoreArena`` quantizes with a single global scale ``delta = max impact /

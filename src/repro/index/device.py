@@ -40,6 +40,16 @@ On top sit two batched execution paths:
 ``stats`` counts device calls and blocks decoded per path; the engine's
 work-list dedup guarantees <= 1 decode per hot (term, block) per batch, which
 ``benchmarks/bench_query.py`` records alongside the qps numbers.
+
+Generations (the streaming mutable index): an arena is built from — and
+belongs to — exactly one immutable ``Generation`` (``repro.index.segments``
+holds the mutable side).  ``Generation.to_device`` caches the arena on the
+generation object, so an ``ExecutionPlan`` pinned to an old generation keeps
+resolving the old arena after a ``compact()`` swap, while new plans build (or
+reuse) the next generation's arena; nothing in this module is mutated in
+place.  Tombstone gating happens above, in the engine, as one packed
+live-bitmap AND per epoch (``intersect_rounds.pack_live_words``) — the arena
+tables themselves never change under deletes.
 """
 
 from __future__ import annotations

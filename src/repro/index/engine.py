@@ -42,6 +42,17 @@ hardware-speed along three axes:
      margin — a provable superset of the float top-k), rescored exactly by
      the block-lazy float oracle: results are bitwise identical to the host
      BM25 path, ties broken by ascending docid.
+  6. **Streaming mutation** (``repro.index.segments``) — the engine serves an
+     :class:`~repro.index.invindex.InvertedIndex` handle that may carry
+     tombstones and a delta segment on top of its immutable compressed
+     generation.  Every query resolves a frozen :class:`_ExecCtx` (generation
+     + delta snapshot + tombstone set + live corpus stats); plans pin their
+     ctx, so a ``compact()`` under an in-flight plan cannot change its
+     results.  Device paths gate probes with the epoch's packed live bitmap
+     (one upload per epoch, zero downloads) and the host merges in a brute
+     -force scan of the small delta segment; all block/score caches are keyed
+     by generation / epoch so no stale state can serve across a compaction.
+     Results stay bitwise identical to rebuilding the index from scratch.
 
 Execution is planned, then run: ``engine.plan(batch)`` resolves *once* where
 the batch runs (placement: host / device / fused) and what every referenced
@@ -88,6 +99,34 @@ HOST_BATCH_MAX = 1
 
 _EMPTY_U32 = np.zeros(0, np.uint32)
 _EMPTY_U32.setflags(write=False)
+_EMPTY_I64 = np.zeros(0, np.int64)
+_EMPTY_I64.setflags(write=False)
+
+# a ranked margin so large the candidate compact keeps EVERY member doc:
+# under a mutation epoch the quantized accumulator uses generation-time
+# impact codes (stale df/avdl), so the theta-margin cut is disarmed and the
+# exact float rescore (live stats) does all the ranking
+_KEEP_ALL_MARGIN = 1 << 30
+
+
+def _merge_disjoint(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Union of two sorted uint32 docid arrays known to be disjoint (the
+    generation half and the delta half of a result share no docids by the
+    shadowing invariant of ``repro.index.segments``)."""
+    if len(b) == 0:
+        return a if a.flags.writeable else a.copy()
+    if len(a) == 0:
+        return b if b.flags.writeable else b.copy()
+    out = np.concatenate([a, b])
+    out.sort()
+    return out
+
+
+def _dead_hits(dead: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Bool mask over ``ids`` marking tombstoned docids (``dead`` sorted
+    int64, non-empty; ``ids`` sorted uint32)."""
+    pos = np.minimum(np.searchsorted(dead, ids), len(dead) - 1)
+    return dead[pos] == ids
 
 
 class BlockCache:
@@ -182,7 +221,8 @@ class TermCaps:
     """One term's execution capabilities, resolved once at plan time from the
     codec registry's declarations (no codec-name dispatch at run time).
 
-    codec: the codec of the term's posting blocks.
+    codec: the codec of the term's posting blocks (None for terms that only
+        exist in the mutable delta segment — they have no compressed blocks).
     arena: the codec declares an ``ArenaLayout`` — its blocks decode natively
         in the batched device work-list (otherwise they fall back to the
         per-block numpy oracle inside the arena).
@@ -191,6 +231,58 @@ class TermCaps:
     codec: Optional[str]
     arena: bool
     fused: bool
+
+
+class _ExecCtx:
+    """One mutation epoch's frozen serving view: everything a query (or a
+    pinned plan) needs to execute bit-identically regardless of writes or
+    compactions that land afterwards.
+
+    gen: the immutable :class:`~repro.index.invindex.Generation`.
+    delta: frozen delta-segment snapshot (None when the epoch is unmutated).
+    dead: sorted int64 tombstoned base docids (all < ``gen.n_docs``).
+    doclen / n_docs / avdl: live corpus stats over the full append-only doc
+        space — exactly what a from-scratch rebuild would compute, so BM25
+        floats match the rebuild bitwise.
+    mutated: whether serving must consult delta/tombstone state at all.
+    skey: the epoch key (gid, tombstone version, delta version) that score
+        -cache entries carry.
+    """
+    __slots__ = ("gen", "delta", "dead", "doclen", "n_docs", "avdl",
+                 "mutated", "skey", "_df", "_live_dev")
+
+    def __init__(self, idx):
+        gen = getattr(idx, "gen", idx)
+        self.gen = gen
+        self.mutated = bool(getattr(idx, "mutated", False))
+        self._df: dict = {}        # term -> live df memo
+        self._live_dev = None      # uploaded packed live bitmap (per epoch)
+        if self.mutated:
+            self.delta = idx.delta.snapshot()
+            self.dead = idx.tomb.sorted_ids(below=gen.n_docs)
+            self.doclen = idx.doclen_now()
+            self.n_docs = int(idx.doc_space)
+            # the same expression Generation.build's avdl uses, on the same
+            # array a rebuild would be given -> bitwise-equal BM25 floats
+            self.avdl = (float(np.asarray(self.doclen).mean())
+                         if self.n_docs else 1.0)
+            self.skey = idx.epoch
+        else:
+            self.delta = None
+            self.dead = _EMPTY_I64
+            self.doclen = gen.doclen
+            self.n_docs = gen.n_docs
+            self.avdl = gen.avdl
+            self.skey = (gen.gid, 0, 0)
+
+    def live_dev(self, words: int):
+        """The epoch's packed live bitmap as ONE device row, uploaded on
+        first use and reused for every round of every batch in the epoch
+        (the gate never downloads anything)."""
+        if self._live_dev is None:
+            self._live_dev = jnp.asarray(intersect_rounds.pack_live_words(
+                self.dead, self.gen.n_docs, words))
+        return self._live_dev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +297,10 @@ class ExecutionPlan:
         arenas exist; ``note`` records that decision in the plan's repr.
     terms: per distinct referenced term, its :class:`TermCaps`.  Unknown
         terms (absent from the index) are omitted — execution ignores them.
+    ctx: the pinned :class:`_ExecCtx` — the mutation epoch (generation +
+        delta snapshot + tombstones) this plan executes against.  Mutations
+        or ``compact()`` calls after planning do not affect this plan's
+        results; re-plan to serve the new epoch.
 
     A plan snapshots engine state (placement follows ``to_device``); build
     plans after the engine is in its serving configuration.
@@ -215,6 +311,7 @@ class ExecutionPlan:
     queries: tuple
     terms: Mapping[int, TermCaps]
     note: str = ""
+    ctx: object = dataclasses.field(default=None, repr=False, compare=False)
 
 
 class QueryEngine:
@@ -224,9 +321,10 @@ class QueryEngine:
         self.idx = idx
         self.cache = BlockCache(cache_blocks)
         self.score_cache = BlockCache(cache_score_terms)
-        self._avdl = idx.avdl
         self.arena = None
         self._fused = fused
+        self._ctx = None           # pinned ctx while executing a plan
+        self._ctx_cache = None     # (epoch, _ExecCtx) for the live handle
         # resident_rounds: AND rounds executed with candidates device-resident
         # cand_syncs: per-round candidate downloads (legacy device loop only;
         #   the resident path never syncs between rounds)
@@ -236,11 +334,14 @@ class QueryEngine:
         #   resident ranked path — only the final candidate bitmap syncs)
         # blocks_pruned / blocks_scored: ranked (term, block) work-list
         #   entries dropped by the block-max upper-bound test vs. scattered
+        # tomb_gates: live-bitmap gates applied on device (uploads, not
+        #   downloads — the resident paths stay download-free under deletes)
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
                           "fallback_decodes": 0, "resident_rounds": 0,
                           "cand_syncs": 0, "final_syncs": 0,
                           "score_rounds": 0, "score_syncs": 0,
-                          "blocks_pruned": 0, "blocks_scored": 0}
+                          "blocks_pruned": 0, "blocks_scored": 0,
+                          "tomb_gates": 0}
         if device or fused:
             # deprecated: construct with defaults and call to_device() instead
             warnings.warn(
@@ -250,6 +351,39 @@ class QueryEngine:
                 DeprecationWarning, stacklevel=2)
         if device:
             self.to_device(fused=fused)
+
+    # ---- mutation-epoch resolution ------------------------------------------ #
+
+    def _ctx_now(self) -> _ExecCtx:
+        """The live handle's current epoch ctx (rebuilt when the epoch
+        changes, shared otherwise so per-ctx memos and uploads amortize)."""
+        e = getattr(self.idx, "epoch", None)
+        c = self._ctx_cache
+        if c is None or c[0] != e:
+            self._ctx_cache = c = (e, _ExecCtx(self.idx))
+        return c[1]
+
+    def _cur(self) -> _ExecCtx:
+        """The ctx this call executes under: the plan-pinned ctx inside
+        ``execute``, else the live epoch — walking ``self.arena`` forward to
+        the current generation after a compaction swap."""
+        if self._ctx is not None:
+            return self._ctx
+        ctx = self._ctx_now()
+        if (self.arena is not None
+                and getattr(self.arena.idx, "gen", self.arena.idx)
+                is not ctx.gen):
+            self.arena = ctx.gen.to_device(build_fused=self._fused)
+        return ctx
+
+    def _arena_ctx(self, ctx: _ExecCtx):
+        """The device arena serving ``ctx``'s generation: the engine's own
+        arena when it matches, else the generation's cached arena (how a
+        plan pinned to a pre-compaction generation keeps its blocks)."""
+        a = self.arena
+        if a is not None and getattr(a.idx, "gen", a.idx) is ctx.gen:
+            return a
+        return ctx.gen.to_device(build_fused=self._fused)
 
     def to_device(self, fused=None) -> "QueryEngine":
         """Switch the engine onto the device-resident arenas: all subsequent
@@ -261,21 +395,26 @@ class QueryEngine:
         if fused is not None:
             self._fused = fused
         arena = self.idx.to_device(build_fused=self._fused)
-        if self.arena is None:
+        if (self.arena is None
+                or getattr(self.arena.idx, "gen", self.arena.idx)
+                is not getattr(self.idx, "gen", self.idx)):
             self.arena = arena
         return self
 
     # ---- decode through the cache ------------------------------------------ #
-    # Block entries are keyed (term, block, field) with field 0 = docids and
-    # field 1 = TFs, so AND queries (which never touch TFs) only pay for the
-    # docid stream.  Whole-term concatenations are cached as (term, -1, field)
-    # at cost = block count: a hot term used both as the rarest term (concat)
-    # and as a skip target (blocks) is deliberately held twice — that trades
-    # bounded memory, correctly charged against capacity, for not re-decoding
-    # or re-concatenating on either path.  Every cached array is frozen
-    # read-only before insertion: accessors hand out the cache's backing
-    # arrays, and a caller mutating one would otherwise silently corrupt
-    # later query results.
+    # Block entries are keyed (term, block, field, gid) with field 0 = docids
+    # and field 1 = TFs, so AND queries (which never touch TFs) only pay for
+    # the docid stream.  Whole-term concatenations are cached as
+    # (term, -1, field, gid) at cost = block count: a hot term used both as
+    # the rarest term (concat) and as a skip target (blocks) is deliberately
+    # held twice — that trades bounded memory, correctly charged against
+    # capacity, for not re-decoding or re-concatenating on either path.  The
+    # trailing gid keys every entry to its immutable generation: a compaction
+    # swap simply stops referencing the old gid's entries (they age out of
+    # the LRU) and can never serve them to the new generation's queries.
+    # Every cached array is frozen read-only before insertion: accessors hand
+    # out the cache's backing arrays, and a caller mutating one would
+    # otherwise silently corrupt later query results.
 
     @staticmethod
     def _freeze(a: np.ndarray) -> np.ndarray:
@@ -283,17 +422,18 @@ class QueryEngine:
         return a
 
     def _decode_block_field(self, t: int, bi: int, field: int) -> np.ndarray:
-        key = (t, bi, field)
+        ctx = self._cur()
+        key = (t, bi, field, ctx.gen.gid)
         v = self.cache.get(key)
         if v is None:
             if self.arena is not None:
                 # cache-eviction stragglers outside the batched work-list
                 self.dev_stats["fallback_decodes"] += 1
-                v = self.arena.decode_blocks([key])[0]
+                v = self._arena_ctx(ctx).decode_blocks([(t, bi, field)])[0]
             elif field == 0:
-                v = self.idx.decode_block_ids(t, bi)
+                v = ctx.gen.decode_block_ids(t, bi)
             else:
-                v = self.idx.decode_block_tfs(t, bi)
+                v = ctx.gen.decode_block_tfs(t, bi)
             v = self._freeze(v)
             self.cache.put(key, v)
         return v
@@ -308,10 +448,11 @@ class QueryEngine:
         return self.decode_block_ids(t, bi), self.decode_block_tfs(t, bi)
 
     def _term_concat(self, t: int, field: int, decode_one) -> np.ndarray:
-        key = (t, -1, field)
+        ctx = self._cur()
+        key = (t, -1, field, ctx.gen.gid)
         v = self.cache.get(key)
         if v is None:
-            nb = self.idx.n_blocks(t)
+            nb = ctx.gen.n_blocks(t)
             if nb == 0:
                 # frozen like every other accessor result (zero-length, so one
                 # shared read-only singleton is contract-equivalent to caching)
@@ -328,26 +469,30 @@ class QueryEngine:
     def _prefetch_blocks(self, entries: list) -> None:
         """Dedupe a (term, block, field) work-list against the cache and
         decode the misses in one batched arena call."""
+        ctx = self._cur()
+        gid = ctx.gen.gid
         missing, seen = [], set()
         for e in entries:
-            if e in seen or self.cache.contains(e):
+            if e in seen or self.cache.contains(e + (gid,)):
                 continue
             seen.add(e)
             missing.append(e)
         self.dev_stats["worklist_decodes"] += len(missing)
         if not missing:
             return
-        for e, a in zip(missing, self.arena.decode_blocks(missing)):
-            self.cache.put(e, self._freeze(a))
+        arena = self._arena_ctx(ctx)
+        for e, a in zip(missing, arena.decode_blocks(missing)):
+            self.cache.put(e + (gid,), self._freeze(a))
 
     def _prefetch_terms(self, terms, fields=(0, 1)) -> None:
+        ctx = self._cur()
         entries = []
         for t in terms:
-            if t not in self.idx.terms:
+            if t not in ctx.gen.terms:
                 continue
-            nb = self.idx.n_blocks(t)
+            nb = ctx.gen.n_blocks(t)
             for f in fields:
-                if not self.cache.contains((t, -1, f)):
+                if not self.cache.contains((t, -1, f, ctx.gen.gid)):
                     entries.extend((t, bi, f) for bi in range(nb))
         self._prefetch_blocks(entries)
 
@@ -360,12 +505,54 @@ class QueryEngine:
     def term_postings(self, t: int):
         return self.term_ids(t), self.term_tfs(t)
 
+    # ---- live (mutation-aware) posting views -------------------------------- #
+
+    def _df_live(self, t: int, ctx: _ExecCtx) -> int:
+        """Live document frequency of term t under ``ctx``: generation df
+        minus tombstoned postings plus delta postings (memoized per ctx).
+        ``known`` under mutation means df_live > 0 — exactly the terms a
+        from-scratch rebuild would still contain."""
+        if not ctx.mutated:
+            tp = ctx.gen.terms.get(t)
+            return tp.df if tp is not None else 0
+        v = ctx._df.get(t)
+        if v is None:
+            tp = ctx.gen.terms.get(t)
+            base = tp.df if tp is not None else 0
+            if base and len(ctx.dead):
+                base -= int(_dead_hits(ctx.dead, self.term_ids(t)).sum())
+            ctx._df[t] = v = base + ctx.delta.df(t)
+        return v
+
+    def _live_postings(self, t: int, ctx: _ExecCtx):
+        """Term t's live postings under ``ctx``: generation postings minus
+        tombstones, merge-sorted with the delta postings (disjoint by the
+        shadowing invariant) — identical arrays to a from-scratch rebuild's
+        ``term_ids``/``term_tfs``."""
+        if t in ctx.gen.terms:
+            ids, tfs = self.term_ids(t), self.term_tfs(t)
+            if len(ctx.dead) and len(ids):
+                keep = ~_dead_hits(ctx.dead, ids)
+                ids, tfs = ids[keep], tfs[keep]
+        else:
+            ids, tfs = _EMPTY_U32, _EMPTY_U32
+        dids, dtfs = ctx.delta.postings(t)
+        if len(dids):
+            if len(ids) == 0:
+                return dids.copy(), dtfs.copy()
+            ids = np.concatenate([ids, dids])
+            tfs = np.concatenate([tfs, dtfs])
+            order = np.argsort(ids, kind="stable")
+            ids, tfs = ids[order], tfs[order]
+        return ids, tfs
+
     # ---- fused decode-and-intersect ---------------------------------------- #
 
     def _block_plan(self, t: int, cand: np.ndarray):
         """Skip-table pruning: candidate cut points per block of term t and
         the indices of blocks whose docid range contains a candidate."""
-        firsts = self.idx.block_firsts(t).astype(cand.dtype)  # avoid a cast copy
+        gen = self._cur().gen
+        firsts = gen.block_firsts(t).astype(cand.dtype)  # avoid a cast copy
         cut = np.empty(len(firsts) + 1, np.int64)
         cut[:-1] = np.searchsorted(cand, firsts)
         cut[-1] = len(cand)
@@ -400,7 +587,8 @@ class QueryEngine:
         the legacy loop that syncs every query's candidates to the host
         between rounds (planned execution now runs the device-resident
         ``_and_many_resident`` instead; this stays for direct callers and as
-        the host-candidate reference).
+        the host-candidate reference).  Serves the current generation only —
+        planned execution layers tombstones and the delta on top.
 
         Round r intersects every still-active query with its (r+1)-th rarest
         term; the round's (term, block) needs across the WHOLE batch are
@@ -416,11 +604,12 @@ class QueryEngine:
             return (terms[t].fused if terms is not None
                     else self._term_fused(t, sel))
 
-        qterms = [sorted((t for t in q if t in self.idx.terms),
-                         key=lambda t: self.idx.terms[t].df) for q in queries]
+        gen = self._cur().gen
+        qterms = [sorted((t for t in q if t in gen.terms),
+                         key=lambda t: gen.terms[t].df) for q in queries]
         for ts in qterms:               # raw seed-term block references,
             if ts:                      # pre-dedup (work-list metric)
-                self.dev_stats["worklist_refs"] += self.idx.n_blocks(ts[0])
+                self.dev_stats["worklist_refs"] += gen.n_blocks(ts[0])
         if self.arena is not None:
             self._prefetch_terms({ts[0] for ts in qterms if ts}, fields=(0,))
         cands = [self.term_ids(ts[0]) if ts else _EMPTY_U32 for ts in qterms]
@@ -462,8 +651,9 @@ class QueryEngine:
         metadata, so no candidate state is needed on the host.  The selection
         is a superset of the blocks holding candidates, which is all the
         probe-and-scatter round needs for exactness."""
-        f = self.idx.block_firsts(t)
-        l = self.idx.block_lasts(t)
+        gen = self._cur().gen
+        f = gen.block_firsts(t)
+        l = gen.block_lasts(t)
         j = np.searchsorted(cov_l, f)            # first interval ending >= f
         hit = j < len(cov_l)
         jc = np.minimum(j, max(len(cov_f) - 1, 0))
@@ -474,12 +664,14 @@ class QueryEngine:
         and decode the misses in one device-resident arena call; returns
         {(t, bi): (padded_device_row, n)} for every entry, pinned for the
         round regardless of cache eviction pressure."""
+        ctx = self._cur()
+        gid = ctx.gen.gid
         out: dict = {}
         missing: list = []
         for e in entries:
             if e in out:
                 continue
-            v = self.cache.get((e[0], e[1], 2))
+            v = self.cache.get((e[0], e[1], 2, gid))
             if v is None:
                 out[e] = None
                 missing.append(e)
@@ -487,10 +679,10 @@ class QueryEngine:
                 out[e] = v
         self.dev_stats["worklist_decodes"] += len(missing)
         if missing:
-            rows, ns = self.arena.decode_blocks_device(missing)
+            rows, ns = self._arena_ctx(ctx).decode_blocks_device(missing)
             for e, row, n in zip(missing, rows, ns):
                 out[e] = (row, n)
-                self.cache.put((e[0], e[1], 2), (row, n))
+                self.cache.put((e[0], e[1], 2, gid), (row, n))
         return out
 
     def _stack_worklist(self, entries: list):
@@ -525,7 +717,7 @@ class QueryEngine:
         bm, _, _ = self._and_bitmap_resident(queries, terms, use_fused)
         self.dev_stats["final_syncs"] += 1
         return intersect_rounds.extract_ids(np.asarray(bm)[:len(queries)],
-                                            self.idx.n_docs)
+                                            self._cur().gen.n_docs)
 
     def _and_bitmap_resident(self, queries: list,
                              terms: Mapping[int, TermCaps] | None = None,
@@ -543,18 +735,36 @@ class QueryEngine:
         Under ``use_fused`` the rounds run the segmented Pallas
         decode+probe kernel over the packed gap tiles instead.
 
+        Under a mutation epoch the seed bitmap is ANDed with the epoch's
+        packed live row right after round 0 (one upload, zero downloads):
+        tombstoned docs fail every later probe, so the final bitmaps hold
+        exactly the generation's LIVE intersections.  A query whose live
+        terms include a delta-only term has no generation matches at all and
+        seeds empty; the caller unions in the delta-segment scan.
+
         Returns (bitmap, qterms, cov) — the (nqp, words) device bitmap, the
         per-query known terms sorted rarest-first, and the per-query seed
         coverage intervals (for further static block selection).  Results
         are bit-identical to ``and_query`` per query.
         """
-        idx = self.idx
+        ctx = self._cur()
+        idx = ctx.gen
         nq = len(queries)
         words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         if nq == 0:
             return jnp.zeros((0, words), jnp.uint32), [], {}
-        qterms = [sorted((t for t in q if t in idx.terms),
-                         key=lambda t: idx.terms[t].df) for q in queries]
+        if ctx.mutated:
+            qterms = []
+            for q in queries:
+                known = [t for t in q if self._df_live(t, ctx) > 0]
+                if any(t not in idx.terms for t in known):
+                    qterms.append([])   # delta-only live term: no base match
+                else:
+                    qterms.append(sorted(known,
+                                         key=lambda t: idx.terms[t].df))
+        else:
+            qterms = [sorted((t for t in q if t in idx.terms),
+                             key=lambda t: idx.terms[t].df) for q in queries]
         nqp = _bucket(nq)
         bm = jnp.zeros((nqp, words), jnp.uint32)
 
@@ -581,6 +791,11 @@ class QueryEngine:
         pairs0 = [(i, qterms[i][0], bi) for i in seeds
                   for bi in range(idx.n_blocks(qterms[i][0]))]
         bm = scatter(pairs0, seeds, probe=False)
+        if ctx.mutated and len(ctx.dead):
+            # gate the seed with the epoch's live row: every later round
+            # only keeps survivors, so one AND suffices for the whole batch
+            bm = bm & ctx.live_dev(words)[None, :]
+            self.dev_stats["tomb_gates"] += 1
         cov = {i: (idx.block_firsts(qterms[i][0]),
                    idx.block_lasts(qterms[i][0])) for i in seeds}
 
@@ -606,7 +821,7 @@ class QueryEngine:
             if fused_pairs:
                 active_f = np.zeros(nqp, bool)
                 active_f[fused_q] = True
-                ids, hits, qs = self.arena.fused_round(
+                ids, hits, qs = self._arena_ctx(ctx).fused_round(
                     fused_pairs, bm.reshape(nqp * crows, -1))
                 bm = intersect_rounds.bitmap_round_masked(
                     bm, ids.reshape(len(qs), -1),
@@ -619,8 +834,14 @@ class QueryEngine:
         return bm, qterms, cov
 
     def and_query(self, terms: list) -> np.ndarray:
-        terms = sorted((t for t in terms if t in self.idx.terms),
-                       key=lambda t: self.idx.terms[t].df)
+        ctx = self._cur()
+        if ctx.mutated:
+            return self._and_query_mut(list(terms), ctx)
+        return self._and_gen([t for t in terms if t in ctx.gen.terms], ctx)
+
+    def _and_gen(self, terms: list, ctx: _ExecCtx) -> np.ndarray:
+        """AND over generation postings only (terms already known)."""
+        terms = sorted(terms, key=lambda t: ctx.gen.terms[t].df)
         if not terms:
             return np.zeros(0, np.uint32)
         cand = self.term_ids(terms[0])
@@ -634,20 +855,55 @@ class QueryEngine:
         # the cache's frozen backing array
         return cand if owned else cand.copy()
 
+    def _and_query_mut(self, terms: list, ctx: _ExecCtx) -> np.ndarray:
+        """Live AND under a mutation epoch: the generation intersection
+        (tombstone-filtered) unioned with the delta-segment scan — bitwise
+        what ``and_query`` on a from-scratch rebuild returns.
+
+        ``known`` keeps terms with live postings (df_live > 0), matching the
+        rebuild's unknown-term semantics: a term whose postings are all
+        tombstoned vanishes from the rebuilt index and is ignored, while a
+        live term still ANDs.  If any live term exists only in the delta, no
+        generation doc can match it (delta docids shadow their base copies),
+        so the generation half is empty.
+        """
+        known = [t for t in terms if self._df_live(t, ctx) > 0]
+        if not known:
+            return np.zeros(0, np.uint32)
+        if all(t in ctx.gen.terms for t in known):
+            base = self._and_gen(known, ctx)
+            if len(ctx.dead) and len(base):
+                base = base[~_dead_hits(ctx.dead, base)]
+        else:
+            base = _EMPTY_U32
+        return _merge_disjoint(base, ctx.delta.scan_and(known))
+
     # ---- BM25 -------------------------------------------------------------- #
 
     def term_scores(self, t: int):
-        v = self.score_cache.get(t)
+        ctx = self._cur()
+        key = (t,) + ctx.skey
+        v = self.score_cache.get(key)
         if v is None:
-            ids, tfs = self.term_ids(t), self.term_tfs(t)
-            sc = bm25_scores(tfs, self.idx.doclen[ids], self.idx.terms[t].df,
-                             self.idx.n_docs, self._avdl)
+            if ctx.mutated:
+                ids, tfs = self._live_postings(t, ctx)
+                ids = self._freeze(ids)
+                df = len(ids)
+            else:
+                ids, tfs = self.term_ids(t), self.term_tfs(t)
+                df = ctx.gen.terms[t].df
+            sc = bm25_scores(tfs, ctx.doclen[ids], df, ctx.n_docs, ctx.avdl)
             v = (ids, self._freeze(sc))
-            self.score_cache.put(t, v)
+            self.score_cache.put(key, v)
         return v
 
     def or_query(self, terms: list, k: int = 10):
-        parts = [self.term_scores(t) for t in terms if t in self.idx.terms]
+        ctx = self._cur()
+        if ctx.mutated:
+            use = [t for t in terms if self._df_live(t, ctx) > 0]
+        else:
+            use = [t for t in terms if t in ctx.gen.terms]
+        parts = [self.term_scores(t) for t in use]
         if not parts:
             return []
         ids = np.concatenate([p[0] for p in parts])
@@ -663,12 +919,18 @@ class QueryEngine:
         """The host float top-k oracle: exact BM25 over ``docs`` (term-level
         score vectors through the score cache), selected with the shared
         argpartition + docid-tiebreak rule (:func:`repro.index.scores
-        .topk_select`)."""
+        .topk_select`).  Under a mutation epoch the score vectors are the
+        LIVE ones (``_live_postings``), accumulated in the same query-term
+        order as the unmutated path."""
         if len(docs) == 0:
             return []
+        ctx = self._cur()
         scores = np.zeros(len(docs))
         for t in terms:
-            if t not in self.idx.terms or not self.idx.terms[t].blocks:
+            if ctx.mutated:
+                if self._df_live(t, ctx) <= 0:
+                    continue        # unknown (or fully tombstoned) scores 0
+            elif t not in ctx.gen.terms or not ctx.gen.terms[t].blocks:
                 continue            # unknown or zero-posting term scores 0
             ids, sc = self.term_scores(t)
             pos = np.searchsorted(ids, docs)
@@ -683,10 +945,13 @@ class QueryEngine:
         (the ranked device path's final stage: candidates are few, so whole
         -term decodes would waste the pruning win).  Bitwise identical to
         :meth:`_score_docs` — same float formula (``bm25_scores``), same
-        per-doc term accumulation order, same tie rule."""
+        per-doc term accumulation order, same tie rule.  Generation-only
+        (the mutated ranked path rescores with :meth:`_score_docs`, whose
+        score vectors carry the live stats)."""
         if len(docs) == 0:
             return []
-        idx = self.idx
+        ctx = self._cur()
+        idx = ctx.gen
         scores = np.zeros(len(docs))
         plans = []
         prefetch = []
@@ -712,8 +977,8 @@ class QueryEngine:
                 pos = np.clip(pos, 0, len(ids) - 1)
                 hit = ids[pos] == docs[sel]
                 sub = sel[hit]
-                sc = bm25_scores(tfs[pos[hit]], idx.doclen[docs[sub]], df,
-                                 idx.n_docs, self._avdl)
+                sc = bm25_scores(tfs[pos[hit]], ctx.doclen[docs[sub]], df,
+                                 ctx.n_docs, ctx.avdl)
                 scores[sub] += sc
         return topk_select(docs, scores, k)
 
@@ -732,11 +997,12 @@ class QueryEngine:
         lose contributions of docs provably outside the true top-k (see
         ``repro/index/scores.py``)."""
         t = occs[r]
-        nb = self.idx.n_blocks(t)
+        gen = self._cur().gen
+        nb = gen.n_blocks(t)
         if theta0 <= 0 or nb == 0:
             return np.arange(nb), 0
-        firsts = self.idx.block_firsts(t)
-        lasts = self.idx.block_lasts(t)
+        firsts = gen.block_firsts(t)
+        lasts = gen.block_lasts(t)
         base = sa.slot[(t, 0)]          # a term's slots are contiguous
         ub = sa.block_max[base:base + nb].astype(np.int64) + len(occs)
         for t2 in occs[:r] + occs[r + 1:]:
@@ -760,14 +1026,30 @@ class QueryEngine:
         superset of the float top-k), which the block-lazy float oracle
         rescores exactly: results are bitwise identical to the host path,
         ties broken by ascending docid.
+
+        Under a mutation epoch the quantized tables carry generation-time
+        stats, so the theta cut is disarmed (theta0 = 0, margin so large the
+        compact keeps every member — the candidate set degrades to the full
+        live membership bitmap, still an exact superset) and OR rounds gate
+        with the epoch's live row (``gated=True``: tombstoned docs never
+        enter the accumulator or the membership bitmap — no new downloads).
+        The final rescore unions the delta-segment scan per query and runs
+        the live-stat float oracle; a fresh compaction re-arms the pruning.
         """
-        idx = self.idx
+        ctx = self._cur()
+        idx = ctx.gen
         nq = len(queries)
         if nq == 0:
             return []
         self.arena.ensure_scores()
         sa = self.arena.scores
-        known = [[t for t in q if t in idx.terms] for q in queries]
+        if ctx.mutated:
+            known = [[t for t in q if self._df_live(t, ctx) > 0]
+                     for q in queries]
+            base_ts = [[t for t in ts if t in idx.terms] for ts in known]
+        else:
+            known = [[t for t in q if t in idx.terms] for q in queries]
+            base_ts = known
         if k <= 0 or not any(known):
             return [[] for _ in queries]
         words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
@@ -778,16 +1060,24 @@ class QueryEngine:
         gate = cov = None
         if mode == "and_scored":
             gate, _, cov = self._and_bitmap_resident(queries, terms, use_fused)
+        eff_gate = gate
+        if gate is None and ctx.mutated and len(ctx.dead):
+            # OR mode under deletes: the epoch's live row gates every lane
+            eff_gate = jnp.broadcast_to(ctx.live_dev(words), (nqp, words))
+            self.dev_stats["tomb_gates"] += 1
         gate_tiles = None
         if use_fused:       # the probe target of the fused rounds: the AND
-            # bitmap, or (OR mode) all-ones so only lane validity gates
-            gate_tiles = (gate if gate is not None else
+            # bitmap (live-gated under mutation), the live row, or (OR mode,
+            # no deletes) all-ones so only lane validity gates
+            gate_tiles = (eff_gate if eff_gate is not None else
                           jnp.full((nqp, words), jnp.uint32(0xFFFFFFFF))
                           ).reshape(nqp * crows, -1)
-        order = [sorted(ts, key=lambda t: -sa.term_max[t]) for ts in known]
+        order = [sorted(ts, key=lambda t: -sa.term_max[t]) for ts in base_ts]
         margins = np.zeros(nqp, np.int32)
-        margins[:nq] = [len(ts) for ts in known]
-        theta0 = [sa.theta0(ts, k) if mode == "or" else 0 for ts in known]
+        margins[:nq] = [_KEEP_ALL_MARGIN if ctx.mutated else len(ts)
+                        for ts in known]
+        theta0 = [sa.theta0(ts, k) if mode == "or" and not ctx.mutated else 0
+                  for ts in base_ts]
         for r in range(max((len(ts) for ts in order), default=0)):
             plain, fused_pairs = [], []
             for i in range(nq):
@@ -812,8 +1102,8 @@ class QueryEngine:
                 codes = sa.rows(pairs + [pairs[0]] * (p - len(pairs)))
                 acc, member = topk.score_round(
                     acc, member, rows, jnp.asarray(qs), codes,
-                    jnp.asarray(ns), gate if gate is not None else member,
-                    gated=gate is not None)
+                    jnp.asarray(ns), eff_gate if eff_gate is not None else member,
+                    gated=eff_gate is not None)
             if fused_pairs:
                 ids, hits, codes, qs = self.arena.fused_round_scored(
                     fused_pairs, gate_tiles)
@@ -827,8 +1117,18 @@ class QueryEngine:
         self.dev_stats["final_syncs"] += 1
         cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
                                             idx.n_docs)
-        return [self._score_docs_blockwise(q, c, k)
-                for q, c in zip(queries, cand)]
+        if not ctx.mutated:
+            return [self._score_docs_blockwise(q, c, k)
+                    for q, c in zip(queries, cand)]
+        out = []
+        for i, (q, c) in enumerate(zip(queries, cand)):
+            if mode == "or":
+                d = ctx.delta.scan_any(known[i])
+            else:
+                d = (ctx.delta.scan_and(known[i]) if known[i]
+                     else _EMPTY_U32)
+            out.append(self._score_docs(q, _merge_disjoint(c, d), k))
+        return out
 
     # ---- planned execution -------------------------------------------------- #
 
@@ -837,8 +1137,14 @@ class QueryEngine:
         (host / device / fused, following the engine's current arena state)
         plus every referenced term's codec capabilities, read once from the
         codec registry's declarations.  ``execute(plan)`` then runs with no
-        per-codec or per-flag branching."""
+        per-codec or per-flag branching.
+
+        The plan also pins the current mutation epoch (:class:`_ExecCtx`):
+        its generation, a frozen delta snapshot, and the tombstone set.
+        Executing the plan after later inserts/deletes/compactions returns
+        the SAME results it would have returned at plan time."""
         _check_mode(batch.mode)
+        ctx = self._cur()
         placement = ("fused" if self.arena is not None and self._fused else
                      "device" if self.arena is not None else "host")
         note = ""
@@ -847,49 +1153,70 @@ class QueryEngine:
                     f"HOST_BATCH_MAX={HOST_BATCH_MAX} (tiny batches win on "
                     f"the host path)")
             placement = "host"
+        if ctx.mutated:
+            mnote = (f"pinned epoch {ctx.skey}: {len(ctx.dead)} tombstone(s), "
+                     f"{len(ctx.delta)} delta doc(s)")
+            note = f"{note}; {mnote}" if note else mnote
         terms: dict[int, TermCaps] = {}
         for q in batch.queries:
             for t in q:
-                if t in terms or t not in self.idx.terms:
+                if t in terms:
                     continue
-                blocks = self.idx.terms[t].blocks
-                name = blocks[0][1].codec if blocks else None
-                spec = codec_lib.get(name) if name is not None else None
-                terms[t] = TermCaps(
-                    codec=name,
-                    arena=bool(spec is not None and spec.arena is not None),
-                    fused=(placement == "fused" and self.arena.has_fused(
-                        t, range(len(blocks)))))
+                if t in ctx.gen.terms:
+                    blocks = ctx.gen.terms[t].blocks
+                    name = blocks[0][1].codec if blocks else None
+                    spec = codec_lib.get(name) if name is not None else None
+                    terms[t] = TermCaps(
+                        codec=name,
+                        arena=bool(spec is not None and spec.arena is not None),
+                        fused=(placement == "fused" and self.arena.has_fused(
+                            t, range(len(blocks)))))
+                elif ctx.delta is not None and ctx.delta.has_term(t):
+                    # delta-only term: no compressed blocks, host scan only
+                    terms[t] = TermCaps(codec=None, arena=False, fused=False)
         return ExecutionPlan(mode=batch.mode, k=batch.k, placement=placement,
                              queries=tuple(tuple(q) for q in batch.queries),
-                             terms=terms, note=note)
+                             terms=terms, note=note, ctx=ctx)
 
     def execute(self, work) -> list:
         """Run an :class:`ExecutionPlan`; results align with the planned
         queries.  Passing a ``QueryBatch`` is a deprecated shim that plans
         implicitly (bit-identical results).
 
+        Execution happens under the plan's pinned ctx: the generation, delta
+        snapshot, and tombstone set resolved at plan time — so a
+        ``compact()`` racing an in-flight plan never changes its results
+        (the pinned generation's arena and caches stay addressable by gid).
+
         On the host placement queries are processed grouped by sorted term
         signature so queries sharing terms hit the decoded-block/score caches
         back to back.  On the device/fused placements AND semantics run
-        round-batched through ``and_many`` — one deduped arena decode per
-        round across the whole batch — and OR/scored modes prefetch every
-        needed (term, block) in one arena call before scoring.
+        round-batched through ``_and_many_resident`` — one deduped arena
+        decode per round across the whole batch — and OR/scored modes run the
+        resident ranked accumulator.
         """
         if isinstance(work, QueryBatch):
             work = self.plan(work)
         plan: ExecutionPlan = work
         _check_mode(plan.mode)
-        if plan.placement != "host" and self.arena is None:
-            raise ValueError(
-                f"plan placement {plan.placement!r} needs device arenas; call "
-                "to_device() on this engine (or re-plan on it) first")
-        if plan.placement == "fused" and self.arena._pk is None:
-            raise ValueError(
-                "plan placement 'fused' needs fused tile arenas; call "
-                "to_device(fused=True) on this engine (or re-plan on it) first")
+        ctx: _ExecCtx = plan.ctx if plan.ctx is not None else self._cur()
         if plan.placement != "host":
-            return self._execute_device(plan)
+            if self.arena is None:
+                raise ValueError(
+                    f"plan placement {plan.placement!r} needs device arenas; "
+                    "call to_device() on this engine (or re-plan on it) first")
+            arena = self._arena_ctx(ctx)
+            if plan.placement == "fused" and arena._pk is None:
+                raise ValueError(
+                    "plan placement 'fused' needs fused tile arenas; call "
+                    "to_device(fused=True) on this engine (or re-plan on it) "
+                    "first")
+            prev_ctx, self._ctx = self._ctx, ctx
+            prev_arena, self.arena = self.arena, arena
+            try:
+                return self._execute_device(plan, ctx)
+            finally:
+                self._ctx, self.arena = prev_ctx, prev_arena
         fn = {"and": self.and_query,
               "or": lambda q: self.or_query(q, plan.k),
               "and_scored": lambda q: self.and_query_scored(q, plan.k)}[plan.mode]
@@ -901,19 +1228,29 @@ class QueryEngine:
         # plan's contract, not a hint (and per-block arena calls would be
         # strictly slower than the numpy oracle for the tiny batches the
         # auto-placement sends here); the bits are identical either way.
+        prev_ctx, self._ctx = self._ctx, ctx
         prev_fused, self._fused = self._fused, False
         prev_arena, self.arena = self.arena, None
         try:
             for i in order:
                 results[i] = fn(list(plan.queries[i]))
         finally:
+            self._ctx = prev_ctx
             self._fused, self.arena = prev_fused, prev_arena
         return results
 
-    def _execute_device(self, plan: ExecutionPlan) -> list:
+    def _execute_device(self, plan: ExecutionPlan, ctx: _ExecCtx) -> list:
         queries = [list(q) for q in plan.queries]
         fused = plan.placement == "fused"
         if plan.mode == "and":
-            return self._and_many_resident(queries, plan.terms, fused)
+            base = self._and_many_resident(queries, plan.terms, fused)
+            if not ctx.mutated:
+                return base
+            out = []
+            for q, b in zip(queries, base):
+                known = [t for t in q if self._df_live(t, ctx) > 0]
+                d = ctx.delta.scan_and(known) if known else _EMPTY_U32
+                out.append(_merge_disjoint(b, d))
+            return out
         return self._ranked_resident(queries, plan.k, plan.mode,
                                      plan.terms, fused)

@@ -44,6 +44,16 @@ entry whose upper bound ``block_max + sum(other term maxima) + m`` cannot
 reach a static threshold (``theta0``, the k-th top impact of the query's
 strongest term — k docs provably score at least that) only loses
 contributions of docs that are provably outside the true top-k.
+
+Mutation epochs: every table above is computed from one generation's corpus
+stats (df, doclen, avdl) and rebuilt per generation at ``compact()`` time —
+never patched in place.  Between compactions the engine serves mutation
+epochs with pruning *disarmed* (``theta0 = 0`` and a keep-all margin): the
+generation-time codes then act only as membership markers, the candidate set
+degenerates to the full live membership superset, and the exact float
+rescore — which recomputes :func:`bm25_scores` from the epoch's *live* df /
+doclen / avdl — restores bitwise parity with a from-scratch rebuild.  The
+margin contract is unaffected; compaction re-arms pruning with fresh tables.
 """
 
 from __future__ import annotations

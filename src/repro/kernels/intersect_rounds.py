@@ -30,6 +30,13 @@ vectorized; this module is that pipeline's state + kernels:
 Correctness does not depend on block selection: decoding a superset of the
 blocks that could hold candidates is sound, because ids outside the current
 candidate set fail the probe and scatter nothing.
+
+Tombstone gating (the streaming mutable index, ``repro.index.segments``) rides
+the same geometry: :func:`pack_live_words` packs the live-doc mask of a
+mutation epoch into one ``(words,)`` row, and the engine ANDs it into the seed
+bitmap (and the ranked membership gate) right after round 0 — deleted docs
+fail every subsequent probe exactly like non-candidates, so the gate costs one
+host->device upload per epoch and zero downloads.
 """
 
 from __future__ import annotations
@@ -52,6 +59,22 @@ def bitmap_geometry(n_docs: int) -> tuple[int, int]:
     cw = max(1, -(-n_docs // 32))
     rows = -(-cw // LANES)
     return rows * LANES, rows
+
+
+def pack_live_words(dead: np.ndarray, n_docs: int, words: int) -> np.ndarray:
+    """Pack one mutation epoch's live-doc mask into a ``(words,)`` uint32
+    bitmap row in this module's segmented-bitmap order (LSB-first: bit d of
+    word d // 32 is 1 iff doc d is live).
+
+    ``dead`` is the sorted tombstoned docid array (all < ``n_docs``); bits in
+    [n_docs, words * 32) are 0, so ANDing this row into a candidate bitmap
+    never admits out-of-range docs.  The result is host-side — the caller
+    uploads it once per epoch and reuses the device copy across rounds."""
+    bits = np.zeros(words * 32, np.uint8)
+    bits[:n_docs] = 1
+    if len(dead):
+        bits[dead] = 0
+    return np.packbits(bits, bitorder="little").view(np.uint32)
 
 
 # --------------------------------------------------------------------------- #

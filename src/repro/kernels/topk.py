@@ -33,6 +33,15 @@ Correctness does not depend on work-list selection: scattering a superset of
 blocks is exact (codes of docs outside the gate fail the probe), and pruned
 blocks only drop docs provably outside the top-k (see the parity-contract
 note in ``repro/index/scores.py``).
+
+Tombstone gating (the streaming mutable index) needs no new kernel: under a
+mutation epoch the engine passes the epoch's packed live bitmap
+(``intersect_rounds.pack_live_words``, broadcast per query row) as ``gate``
+with ``gated=True`` for OR rounds — deleted docs fail the probe and never
+enter ``acc``/``member``, so ``topk_threshold``/``candidate_bitmap`` only
+ever see live docs and the gate adds zero host syncs.  ``and_scored`` rounds
+are already gated by the AND bitmap, which the engine live-gates at seed
+time.
 """
 
 from __future__ import annotations

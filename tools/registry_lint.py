@@ -25,7 +25,13 @@ Checks, per registered codec:
      tables the ranked top-k prunes with must equal the max over each
      block's stored quantized impacts (and the quantized build-time float
      maxima, and the term-max / stripe range-bound tables) — a drifted
-     table would prune blocks whose docs can still reach the top-k.
+     table would prune blocks whose docs can still reach the top-k;
+  7. segment consistency (streaming mutation, lint corpus): the tombstone
+     set must agree with its live-doc tables (count, bool mask, packed
+     bitmap — the host and kernel packers bit-identical), and after a
+     ``compact()`` merge the new generation's score block-max tables must
+     match its stored impacts and a from-scratch rebuild of the same live
+     corpus.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -199,6 +205,98 @@ def lint_score_tables(errors: list) -> None:
                               f"inconsistent with block maxima")
 
 
+def lint_segments(errors: list) -> None:
+    """Streaming-mutation consistency on the lint corpus: the tombstone set
+    and its live-doc views must agree (count, bool mask, packed bitmap —
+    host and kernel packers bit-identical), the doclen overrides must span
+    the append-only doc space, and after a ``compact()`` merge the new
+    generation's score block-max tables must match its stored impacts AND
+    the tables of a from-scratch rebuild of the same live corpus."""
+    from repro.index.invindex import InvertedIndex
+    from repro.index.scores import ScoreArena
+    from repro.kernels.intersect_rounds import bitmap_geometry, pack_live_words
+
+    rng = np.random.default_rng(23)
+    n_docs = 5000
+    postings = {}
+    for t, df in enumerate([30, 120, 400, 900]):
+        ids = np.sort(rng.choice(n_docs, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    doclen = rng.integers(30, 300, n_docs).astype(np.int64)
+    idx = InvertedIndex.build(doclen, postings, codec="group_pfd")
+    dead = sorted(int(d) for d in rng.choice(n_docs, 200, replace=False))
+    for d in dead:
+        idx.delete(d)
+    inserts = {}
+    for j in range(40):
+        t = int(rng.integers(0, 4))
+        inserts[n_docs + j] = (t, int(rng.integers(1, 5)))
+        idx.insert(n_docs + j, {t: inserts[n_docs + j][1]},
+                   int(rng.integers(10, 100)))
+
+    # tombstone count vs the live-doc tables (bool mask + packed bitmap)
+    mask = idx.tomb.mask(idx.n_docs)
+    if int((~mask).sum()) != len(idx.tomb):
+        _fail(errors, f"segments: live mask drops {int((~mask).sum())} docs "
+                      f"but the tombstone set holds {len(idx.tomb)}")
+    words, _ = bitmap_geometry(idx.n_docs)
+    lw = idx.tomb.live_words(idx.n_docs, words)
+    pop = int(np.unpackbits(lw.view(np.uint8), bitorder="little").sum())
+    if pop != int(mask.sum()):
+        _fail(errors, f"segments: packed live bitmap popcount {pop} != live "
+                      f"mask count {int(mask.sum())}")
+    kernel_packed = pack_live_words(idx.tomb.sorted_ids(below=idx.n_docs),
+                                    idx.n_docs, words)
+    if not np.array_equal(kernel_packed, lw):
+        _fail(errors, "segments: kernels.pack_live_words disagrees with "
+                      "Tombstones.live_words — device and host gates differ")
+    dl = idx.doclen_now()
+    if len(dl) != idx.doc_space:
+        _fail(errors, f"segments: doclen_now length {len(dl)} != doc_space "
+                      f"{idx.doc_space}")
+
+    # the merge: compact, then the new generation's per-segment block-max
+    # tables must match its stored impacts and a from-scratch rebuild
+    deadset = set(dead)
+    live = {}
+    for t, (ids, tfs) in postings.items():
+        keep = [j for j, d in enumerate(ids.tolist()) if d not in deadset]
+        live[t] = ([int(ids[j]) for j in keep], [int(tfs[j]) for j in keep])
+    for d, (t, tf) in inserts.items():
+        live[t][0].append(d)
+        live[t][1].append(tf)
+    live = {t: (np.asarray(i, np.uint32), np.asarray(f, np.uint32))
+            for t, (i, f) in live.items() if i}
+    gen = idx.compact()
+    if idx.mutated:
+        _fail(errors, "segments: handle still mutated after compact()")
+    rebuilt = InvertedIndex.build(np.array(dl), live, codec="group_pfd").gen
+    sa, sr = ScoreArena.from_index(gen), ScoreArena.from_index(rebuilt)
+    if abs(sa.delta - sr.delta) > 0:
+        _fail(errors, "segments: compacted quantizer delta differs from the "
+                      "from-scratch rebuild's")
+    for t, tp in gen.terms.items():
+        rp = rebuilt.terms.get(t)
+        if rp is None or rp.df != tp.df:
+            _fail(errors, f"segments: term {t} df {tp.df} != rebuild "
+                          f"{getattr(rp, 'df', None)}")
+            continue
+        base, rbase = sa.slot[(t, 0)], sr.slot[(t, 0)]
+        nb = len(tp.blocks)
+        for bi in range(nb):
+            stored = int(sa.block_max[base + bi])
+            built = min(int(gen.impact_block_max(t)[bi] / sa.delta), 255)
+            if stored != built:
+                _fail(errors, f"segments: compacted score block-max [{t},{bi}]"
+                              f" = {stored} != quantized stored impact {built}")
+            if stored != int(sr.block_max[rbase + bi]):
+                _fail(errors, f"segments: compacted score block-max [{t},{bi}]"
+                              f" = {stored} != rebuild "
+                              f"{int(sr.block_max[rbase + bi])}")
+        if sa.term_max[t] != sr.term_max[t]:
+            _fail(errors, f"segments: compacted term-max for {t} != rebuild")
+
+
 def main() -> int:
     errors: list = []
     lint_protocol(errors)
@@ -206,6 +304,7 @@ def main() -> int:
     lint_exception_columns(errors)
     lint_parity_coverage(errors)
     lint_score_tables(errors)
+    lint_segments(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
     print(f"registry lint: {len(codec.names())} codecs "
