@@ -23,8 +23,18 @@ density, the compaction pause (one ``compact()`` merge re-encoding the live
 corpus into the next generation), and the delta-segment scan overhead (qps
 with freshly inserted docs pending in the mutable segment vs the compacted
 clean index).  Results go to ``BENCH_mutation.json`` (override with
-``BENCH_MUTATION_JSON``); the tracked CI guarantee is that tombstone gating
-stays resident — ``cand_syncs == 0`` at every density.
+``BENCH_MUTATION_JSON``); the tracked CI guarantees are that tombstone
+gating stays resident — ``cand_syncs == 0`` at every density — and that
+block-max pruning stays ARMED under the tombstone-only epoch
+(``ranked_tomb_1pct.blocks_pruned > 0``: deletes only raise idf, so the
+idf-ratio-deflated threshold keeps the upper-bound test sound; see the
+re-arm note in ``repro/index/scores.py``).
+
+Every input is derived from fixed RNG seeds (corpus via
+``synth.make_corpus(dataset, seed)``, query sets via seeded generators), so
+two runs at the same sizes measure the identical workload — the committed
+``BENCH_query.json`` baseline at the repo root is reproducible bit-for-bit
+on the inputs (timings vary, the workload does not).
 """
 
 from __future__ import annotations
@@ -81,9 +91,9 @@ def make_ranked_queries(postings: dict, n_queries: int, seed: int = 7) -> list:
             for _ in range(n_queries)]
 
 
-def run(n_queries: int = 100, dataset: str = "gov2") -> None:
-    doclen, postings = synth.make_corpus(dataset)
-    queries = make_queries(postings, n_queries)
+def run(n_queries: int = 100, dataset: str = "gov2", seed: int = 0) -> None:
+    doclen, postings = synth.make_corpus(dataset, seed)
+    queries = make_queries(postings, n_queries, seed=3 + seed)
     for name in CODECS:
         idx = InvertedIndex.build(doclen, postings, codec=name)
 
@@ -101,15 +111,17 @@ def run(n_queries: int = 100, dataset: str = "gov2") -> None:
         emit(f"query/{dataset}/{name}/or", t * 1e6, f"{(n_queries // 4) / t:.1f}qps")
     # batched mode needs enough queries sharing terms to expose cache reuse —
     # keep the canonical 256 except under CI smoke sizing (n_queries <= 20)
-    run_batched(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 256)
-    run_mutation(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 128)
+    run_batched(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 256,
+                seed=seed)
+    run_mutation(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 128,
+                 seed=seed)
 
 
 def run_batched(dataset: str = "gov2", codec: str = "group_simple",
-                n_queries: int = 256) -> None:
+                n_queries: int = 256, seed: int = 0) -> None:
     """Batched engine (host + device paths) vs the seed scalar loop."""
-    doclen, postings = synth.make_corpus(dataset)
-    queries = make_queries(postings, n_queries)
+    doclen, postings = synth.make_corpus(dataset, seed)
+    queries = make_queries(postings, n_queries, seed=3 + seed)
     idx = InvertedIndex.build(doclen, postings, codec=codec)
     # provenance stamp: codec, jax backend, and commit make the trajectory
     # comparable across PRs and across CI/TPU runners
@@ -193,7 +205,7 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
     # outside the timers; the tracked CI guarantees are blocks_pruned > 0
     # (the upper-bound test actually drops work) and zero per-round host
     # syncs (only the final candidate bitmap is downloaded, once per batch).
-    ranked_queries = make_ranked_queries(postings, n_queries)
+    ranked_queries = make_ranked_queries(postings, n_queries, seed=7 + seed)
     idx.to_device(build_fused=True).ensure_scores()
     report["ranked"] = {}
     for mode in ("or", "and_scored"):
@@ -216,6 +228,7 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
         eng.execute(eng.plan(QueryBatch(ranked_queries, mode=mode, k=10)))
         entry["blocks_pruned"] = eng.dev_stats["blocks_pruned"]
         entry["blocks_scored"] = eng.dev_stats["blocks_scored"]
+        entry["blocks_dense"] = eng.dev_stats["blocks_dense"]
         entry["score_rounds"] = eng.dev_stats["score_rounds"]
         entry["host_syncs_per_query"] = eng.dev_stats["score_syncs"] / n_queries
         entry["final_syncs"] = eng.dev_stats["final_syncs"]
@@ -231,13 +244,14 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
 
 
 def run_mutation(dataset: str = "gov2", codec: str = "group_pfd",
-                 n_queries: int = 128) -> None:
+                 n_queries: int = 128, seed: int = 0) -> None:
     """Streaming-mutation serving cost: tombstone-gated qps, compaction
     pause, and delta-segment scan overhead (see the module docstring)."""
-    doclen, postings = synth.make_corpus(dataset)
-    queries = make_queries(postings, n_queries)
+    doclen, postings = synth.make_corpus(dataset, seed)
+    queries = make_queries(postings, n_queries, seed=3 + seed)
+    ranked_queries = make_ranked_queries(postings, n_queries, seed=7 + seed)
     n_docs = len(doclen)
-    rng = np.random.default_rng(11)
+    rng = np.random.default_rng(11 + seed)
     report = {"dataset": dataset, "codec": codec, "n_queries": n_queries,
               "n_docs": n_docs, "backend": jax.default_backend(),
               "git_sha": git_sha(), "tombstone_qps": {}}
@@ -276,6 +290,31 @@ def run_mutation(dataset: str = "gov2", codec: str = "group_pfd",
             idx.delete(int(d))
         n_deleted = target
         report["tombstone_qps"][tag] = measure(idx, f"tomb_{tag.rstrip('%')}pct")
+        if tag == "1%":
+            # re-armed block-max pruning under the tombstone-only epoch:
+            # deletes only raise idf, so the idf-ratio-deflated threshold
+            # keeps the upper-bound test sound and pruning must still fire
+            # (blocks_pruned > 0 is the tracked CI guarantee for the re-arm)
+            idx.to_device(build_fused=False).ensure_scores()
+
+            def go_ranked():
+                eng = QueryEngine(idx).to_device()
+                for i in range(0, len(ranked_queries), 64):
+                    eng.execute(eng.plan(QueryBatch(
+                        ranked_queries[i:i + 64], mode="or", k=10)))
+                return eng
+            t = timeit(go_ranked, repeats=3, warmup=1)
+            eng = go_ranked()
+            report["ranked_tomb_1pct"] = {
+                "qps": n_queries / t,
+                "blocks_pruned": eng.dev_stats["blocks_pruned"],
+                "blocks_scored": eng.dev_stats["blocks_scored"],
+                "score_syncs": eng.dev_stats["score_syncs"],
+            }
+            emit(f"query/{dataset}/{codec}/mutate_ranked_tomb_1pct", t * 1e6,
+                 f"{n_queries / t:.1f}qps,"
+                 f"{eng.dev_stats['blocks_pruned']}pruned,"
+                 f"{eng.dev_stats['blocks_scored']}scored")
 
     # compaction pause: one merge of generation-minus-tombstones through the
     # codec registry into the next generation (10% of the corpus dead)
@@ -317,8 +356,11 @@ if __name__ == "__main__":
     ap.add_argument("--mutate", action="store_true",
                     help="only the streaming-mutation suite (BENCH_mutation.json)")
     ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed (corpus + query sets); fixed default "
+                         "keeps runs deterministic")
     args = ap.parse_args()
     if args.mutate:
-        run_mutation(n_queries=args.n_queries or 128)
+        run_mutation(n_queries=args.n_queries or 128, seed=args.seed)
     else:
-        run(n_queries=args.n_queries or 100)
+        run(n_queries=args.n_queries or 100, seed=args.seed)

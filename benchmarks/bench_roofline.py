@@ -1,6 +1,15 @@
 """§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
 JSONs (see launch/dryrun.py + launch/hlo_census.py).  Prints one row per cell;
-the full table + analysis lives in EXPERIMENTS.md."""
+the full table + analysis lives in EXPERIMENTS.md.
+
+``run_kernels`` is the serving-kernel counterpart: each hot ranked/AND kernel
+(``kernels/topk.py`` / ``kernels/intersect_rounds.py``) is lowered and
+compiled at a canonical gov2-scale serving shape on the CURRENT backend, the
+post-fusion HLO is fed through ``launch/hlo_census.py``, and the per-kernel
+flop / memory / wire census plus roofline terms (v5e constants) land in
+``BENCH_kernel_roofline.json`` (override with ``BENCH_KERNEL_ROOFLINE_JSON``)
+— the CI artifact that makes kernel-lowering regressions (a scatter sneaking
+back in, a fusion breaking apart) visible per PR as a census diff."""
 
 from __future__ import annotations
 
@@ -47,5 +56,90 @@ def run(out_dir: str = "experiments/dryrun") -> None:
              f"comp={t_comp*1e3:.2f}ms|mem={t_mem*1e3:.2f}ms|coll={t_coll*1e3:.2f}ms|dom={dom}")
 
 
+def _kernel_cases():
+    """The serving hot loop at a canonical gov2-scale shape: 64 queries,
+    128 work-list entries, 512-posting blocks, 25k-doc bitmap geometry."""
+    import jax.numpy as jnp
+    from repro.kernels import topk
+    from repro.kernels import intersect_rounds as ir
+
+    words, _ = ir.bitmap_geometry(25_000)
+    q, p, ow = 64, 128, 512
+    acc = jnp.zeros((q, words * 32), jnp.uint32)
+    bm = jnp.zeros((q, words), jnp.uint32)
+    ids = jnp.zeros((p, ow), jnp.uint32)
+    qslot = jnp.zeros((p,), jnp.int32)
+    codes = jnp.zeros((p, ow), jnp.uint32)
+    ns = jnp.zeros((p,), jnp.int32)
+    ub = jnp.zeros((p,), jnp.int32)
+    theta = jnp.zeros((q,), jnp.uint32)
+    iq = jnp.full((q,), 1 << 16, jnp.uint32)
+    margin = jnp.zeros((q,), jnp.int32)
+    hits = jnp.zeros((p, ow), jnp.uint32)
+    dense_words = jnp.zeros((p, 128), jnp.uint32)
+    dense_tiles = jnp.zeros((p, 1024), jnp.uint32)
+    w0 = jnp.zeros((p,), jnp.int32)
+    act = jnp.zeros((p,), bool)
+    active = jnp.zeros((q,), bool)
+    return [
+        ("score_round", topk.score_round,
+         (acc, bm, ids, qslot, codes, ns, bm, ub, theta, iq),
+         {"gated": False}),
+        ("score_round_gated", topk.score_round,
+         (acc, bm, ids, qslot, codes, ns, bm, ub, theta, iq),
+         {"gated": True}),
+        ("score_round_masked", topk.score_round_masked,
+         (acc, bm, ids, qslot, codes, hits, ub, theta, iq), {}),
+        ("dense_score_round", topk.dense_score_round,
+         (acc, bm, dense_tiles, dense_words, qslot, w0, ub, theta, iq, bm),
+         {"gated": True}),
+        ("topk_threshold", topk.topk_threshold, (acc,), {"k": 10}),
+        ("pooled_threshold", topk.pooled_threshold, (acc,), {"k": 10}),
+        ("candidate_bitmap", topk.candidate_bitmap,
+         (acc, bm, theta, margin, iq), {}),
+        ("round_accumulate", ir.round_accumulate,
+         (bm, ids, qslot, ns, bm), {}),
+        ("round_accumulate_masked", ir.round_accumulate_masked,
+         (bm, ids, qslot, hits), {}),
+        ("dense_round_accumulate", ir.dense_round_accumulate,
+         (bm, dense_words, qslot, w0, act, bm), {}),
+        ("round_commit", ir.round_commit, (bm, bm, active), {}),
+    ]
+
+
+def run_kernels() -> None:
+    """Per-kernel flop/memory census of the compiled serving kernels."""
+    import jax
+    from repro.launch.hlo_census import census
+
+    report = {"backend": jax.default_backend(), "kernels": {}}
+    for name, fn, args, kw in _kernel_cases():
+        hlo = fn.lower(*args, **kw).compile().as_text()
+        c = census(hlo)
+        t_comp = c.get("flops_per_chip", 0) / PEAK_FLOPS
+        t_mem = c.get("mem_bytes_per_chip", 0) / HBM_BW
+        report["kernels"][name] = {
+            "flops": c.get("flops_per_chip", 0),
+            "mem_bytes": c.get("mem_bytes_per_chip", 0),
+            "wire_bytes": c.get("wire_bytes_per_chip", 0),
+            "n_computations": c.get("n_computations", 0),
+            "t_comp_us": t_comp * 1e6,
+            "t_mem_us": t_mem * 1e6,
+        }
+        emit(f"roofline/kernel/{name}", max(t_comp, t_mem) * 1e6,
+             f"flops={c.get('flops_per_chip', 0):.3g}|"
+             f"mem={c.get('mem_bytes_per_chip', 0):.3g}B|"
+             f"dom={'compute' if t_comp >= t_mem else 'memory'}")
+    path = os.environ.get("BENCH_KERNEL_ROOFLINE_JSON",
+                          "BENCH_kernel_roofline.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--kernels" in sys.argv:
+        run_kernels()
+    else:
+        run()

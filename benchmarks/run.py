@@ -2,6 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses paper-scale
 stream lengths (slower); default sizes finish on a laptop-class CPU.
+
+``--smoke`` is DETERMINISTIC on its inputs: every suite draws its corpus /
+stream / query workload from fixed RNG seeds (``--seed``, default 0) at
+pinned sizes (streams 2**14, 20 queries, the ``synth.DATASETS`` corpus
+shapes), so two smoke runs measure the identical workload and the JSON
+artifacts (``BENCH_query.json`` / ``BENCH_mutation.json`` — a baseline of
+the former is committed at the repo root) differ only in timings.
 """
 
 from __future__ import annotations
@@ -23,7 +30,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized quick pass (tiny streams, fast suites only)")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: speed ratio gsc query index opt pipeline roofline")
+                    help="subset: speed ratio gsc query index opt pipeline "
+                         "roofline kernels")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed for the query suite (fixed default "
+                         "keeps --smoke deterministic)")
     args = ap.parse_args()
     n = 1 << 21 if args.full else (1 << 14 if args.smoke else 1 << 18)
     suites = {
@@ -32,13 +43,16 @@ def main() -> None:
         "speed": lambda: __import__("benchmarks.bench_speed", fromlist=["run"]).run(n=n),
         "opt": lambda: __import__("benchmarks.bench_optimizations", fromlist=["run"]).run(n=n),
         "query": lambda: __import__("benchmarks.bench_query", fromlist=["run"]).run(
-            n_queries=200 if args.full else (20 if args.smoke else 60)),
+            n_queries=200 if args.full else (20 if args.smoke else 60),
+            seed=args.seed),
         "index": lambda: __import__("benchmarks.bench_index_size", fromlist=["run"]).run(),
         "pipeline": lambda: __import__("benchmarks.bench_pipeline", fromlist=["run"]).run(
             n_tokens=max(n >> 1, 1 << 16)),
         "roofline": lambda: __import__("benchmarks.bench_roofline", fromlist=["run"]).run(),
+        "kernels": lambda: __import__("benchmarks.bench_roofline", fromlist=["run_kernels"]).run_kernels(),
     }
-    todo = args.only or (["speed", "query", "index"] if args.smoke else list(suites))
+    todo = args.only or (["speed", "query", "index", "kernels"] if args.smoke
+                         else list(suites))
     print("name,us_per_call,derived")
     failed = []
     for key in todo:

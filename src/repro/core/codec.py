@@ -44,7 +44,7 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from . import bp128, group_afor, group_pfd, group_scheme, group_simple, scalar
-from . import bp_tpu, group_vse, stream_vbyte
+from . import bp_tpu, dense_bitmap, group_vse, stream_vbyte
 from .encoded import Encoded
 
 # One posting block of the inverted index is at most this many integers; all
@@ -126,6 +126,13 @@ class ArenaLayout:
     decode_block: Callable[..., Any]
     supports: Callable[[Encoded], bool] = _supports_default
     max_n: int = ARENA_BLOCK
+    # bitmap-block capability: a layout whose blocks may be raw docid bitmaps
+    # declares the window size (words) and a per-block predicate; the arena
+    # then also stages those blocks globally aligned for the word-parallel
+    # intersect/score rounds.  Zero engine branches: consumers only ever ask
+    # the arena's staging tables.
+    bitmap_words: int = 0
+    is_bitmap: Optional[Callable[[Encoded], bool]] = None
 
     @classmethod
     def two_column(cls, ctrl_width: int, data_width: int, out_width: int,
@@ -361,6 +368,22 @@ _PFD_ARENA = ArenaLayout(
     out_width=ARENA_BLOCK, decode_block=group_pfd.decode_arena_block)
 
 
+def _dense_block_ctrl(enc: Encoded) -> np.ndarray:
+    return np.asarray(enc.control, np.uint32).reshape(-1)
+
+
+# dense-bitmap blocks: ctrl = [fmt, base]; bitmap format stores exactly the
+# 128 window words, the raw fallback stores up to ARENA_BLOCK verbatim values
+# (identity decode), so the layout is total over the codec's own encodings.
+_DENSE_ARENA = ArenaLayout(
+    columns=(ArenaColumn("ctrl", 2, _dense_block_ctrl, np.uint32),
+             ArenaColumn("data", ARENA_BLOCK)),
+    out_width=ARENA_BLOCK,
+    decode_block=dense_bitmap.decode_arena_block,
+    bitmap_words=dense_bitmap.WINDOW_WORDS,
+    is_bitmap=dense_bitmap.is_bitmap)
+
+
 # --------------------------------------------------------------------------- #
 # registry: every codec module registered through the protocol
 # --------------------------------------------------------------------------- #
@@ -432,6 +455,8 @@ register(Codec("bp128", "frame", bp128.encode, bp128.decode_np, is_group=True,
                arena=_bp_arena(32)))
 register(Codec("bp_tpu", "frame", bp_tpu.encode, bp_tpu.decode_np,
                is_group=True))
+register(Codec("dense_bitmap", "word", dense_bitmap.encode,
+               dense_bitmap.decode_np, arena=_DENSE_ARENA))
 register(Codec("g_packed_binary", "frame", bp128.encode_packed_binary,
                bp128.decode_np, is_group=True,
                jax=JaxDecode(bp128.jax_args, bp128.decode_jax_scalar,

@@ -1,0 +1,129 @@
+"""Dense posting blocks as raw 128-word bitmaps.
+
+"SIMD Compression and the Intersection of Sorted Integers" observes that past
+a density threshold a sorted docid block is intersected fastest as an
+uncompressed bitmap — word-parallel AND/probe, no unpack, no prefix-sum.  This
+codec is the declared-capability carrier for that representation: the index
+build (``repro.index.invindex``) decides per block at build time whether the
+block is dense enough (:func:`eligible`), and everything downstream — device
+arena staging, the word-parallel intersect/score rounds, the host oracle —
+discovers the choice through the registry instead of codec-name branches.
+
+Wire format (one :class:`~repro.core.encoded.Encoded` per block):
+
+* ``fmt == "bitmap"`` — ``data`` is exactly :data:`WINDOW_WORDS` uint32 words,
+  bit ``p`` (LSB-first within each word) set iff the block contains the value
+  ``base + p`` where ``base`` is the block's first prefix-sum (``control[1]``).
+  Chosen whenever the prefix sums are strictly increasing and span less than
+  :data:`WINDOW_BITS` — a *mechanism* test, so arbitrary eligible streams
+  round-trip and the conformance/arena harnesses need no special cases.
+* ``fmt == "raw"`` — verbatim uint32 values; the fallback that keeps the codec
+  total over arbitrary streams (the registry lint and conformance sweeps feed
+  streams no bitmap can hold).
+
+The *policy* cutoff — when a posting block is worth storing this way — is
+:func:`eligible`: average docid gap (span/count) at most :data:`DENSE_GAP`.
+For a full 512-posting block that is exactly the 4096-bit window.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .encoded import Encoded
+
+WINDOW_WORDS = 128                       # bitmap window: 128 uint32 words
+WINDOW_BITS = WINDOW_WORDS * 32          # = 4096 docid positions
+DENSE_GAP = 8                            # density cutoff: span <= DENSE_GAP * n
+
+NAME = "dense_bitmap"
+
+
+def eligible(ids: np.ndarray) -> bool:
+    """Build-time density decision for one posting block's docids.
+
+    Besides the density cutoff, the block must fit a 128-word window whose
+    first word is rounded down to a 4-word (128-bit) phase: the serving arena
+    stores dense windows at ``w0 = (ids[0] >> 5) & ~3`` so their global column
+    offset ``w0 * 32`` is a multiple of 128 lanes — a tile-aligned dynamic
+    slice on TPU instead of an unaligned gather.
+    """
+    n = len(ids)
+    if n == 0:
+        return False
+    span = int(ids[-1]) - int(ids[0]) + 1
+    w_last = int(ids[-1]) >> 5
+    w0 = (int(ids[0]) >> 5) & ~3
+    return span <= DENSE_GAP * n and w_last - w0 <= WINDOW_WORDS - 1
+
+
+def is_bitmap(enc: Encoded) -> bool:
+    """True iff this block is stored word-parallel servable (bitmap format)."""
+    return enc.meta.get("fmt") == "bitmap" and enc.n > 0
+
+
+def encode(vals: np.ndarray) -> Encoded:
+    vals = np.ascontiguousarray(vals, dtype=np.uint32)
+    n = int(vals.size)
+    pos = np.cumsum(vals, dtype=np.uint64)
+    fits = (n > 0 and int(pos[-1] - pos[0]) < WINDOW_BITS
+            and (n == 1 or int(vals[1:].min()) >= 1))
+    if fits:
+        rel = (pos - pos[0]).astype(np.int64)
+        bits = np.zeros(WINDOW_BITS, np.uint8)
+        bits[rel] = 1
+        data = np.packbits(bits, bitorder="little").view(np.uint32).copy()
+        control = np.array([1, vals[0]], np.uint32)
+        return Encoded(NAME, n, control, data, control_bits=64,
+                       data_bits=WINDOW_BITS, meta={"fmt": "bitmap"})
+    control = np.array([0, 0], np.uint32)
+    return Encoded(NAME, n, control, vals.copy(), control_bits=64,
+                   data_bits=32 * n, meta={"fmt": "raw"})
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    if enc.meta.get("fmt") != "bitmap":
+        return np.asarray(enc.data[:enc.n], np.uint32).copy()
+    bits = np.unpackbits(np.asarray(enc.data, np.uint32).view(np.uint8),
+                         bitorder="little")
+    rel = np.flatnonzero(bits)
+    assert rel.size == enc.n, (rel.size, enc.n)
+    pos = rel.astype(np.uint64) + np.uint64(enc.control[1])
+    return np.diff(pos, prepend=np.uint64(0)).astype(np.uint32)
+
+
+def block_positions(enc: Encoded) -> np.ndarray:
+    """Bit positions relative to ``base`` for a bitmap-format block."""
+    bits = np.unpackbits(np.asarray(enc.data, np.uint32).view(np.uint8),
+                         bitorder="little")
+    return np.flatnonzero(bits)
+
+
+def decode_arena_block(ctrl, data, ctrl_len, data_len, n_valid):
+    """Fixed-shape device decode for one block (both formats, jit/vmap safe).
+
+    ``ctrl = [fmt, base]``; bitmap blocks recover the value stream by ranking
+    set bits with a prefix-sum and scattering bit positions into posting
+    order, raw blocks are an identity copy.  Both branches are computed and
+    selected — the shapes are static either way.
+    """
+    import jax.numpy as jnp
+
+    from .codec import ARENA_BLOCK
+
+    fmt = ctrl[0]
+    base = ctrl[1]
+    words = data[:WINDOW_WORDS].astype(jnp.uint32)
+    bits = ((words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    bits = bits.reshape(-1).astype(jnp.int32)                  # (WINDOW_BITS,)
+    rank = jnp.cumsum(bits) - 1
+    scat = jnp.where(bits == 1, rank, ARENA_BLOCK)             # pad slot drops
+    posv = jnp.arange(WINDOW_BITS, dtype=jnp.uint32)
+    pos = jnp.zeros(ARENA_BLOCK + 1, jnp.uint32).at[scat].add(
+        jnp.where(bits == 1, posv, 0))[:ARENA_BLOCK]
+    prev = jnp.concatenate([jnp.zeros(1, jnp.uint32), pos[:-1]])
+    gaps_bm = (pos - prev).at[0].add(base.astype(jnp.uint32))
+    gaps_raw = data[:ARENA_BLOCK].astype(jnp.uint32)
+    out = jnp.where(fmt == 1, gaps_bm, gaps_raw)
+    idx = jnp.arange(ARENA_BLOCK, dtype=jnp.int32)
+    return jnp.where(idx < n_valid, out, jnp.uint32(0))

@@ -14,6 +14,7 @@ compressing the posting lists of TREC query terms.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -42,7 +43,11 @@ class PostingList:
 def make_dataset(name: str, seed: int = 0, n_lists: int = 200) -> list:
     """Posting lists for the n_lists most frequent sampled terms."""
     n_docs, n_terms, avg_len, s = DATASETS[name]
-    rng = np.random.default_rng(seed + hash(name) % (1 << 16))
+    # crc32, NOT hash(): str hashing is randomized per process, which made
+    # every benchmark run draw a different corpus — the same (name, seed)
+    # must yield the same dataset in every process for the committed
+    # BENCH_query.json baseline to be reproducible
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (1 << 16))
     # document frequency per term rank (Zipf), clipped to corpus size
     ranks = np.arange(1, n_terms + 1, dtype=np.float64)
     df = np.minimum((n_docs * 0.6) / ranks ** (s - 0.05), n_docs).astype(np.int64)

@@ -55,10 +55,18 @@ placements via ONE packed live-bitmap AND after the seed round —
 ``intersect_rounds.pack_live_words``, one upload per epoch, zero downloads)
 and merged with a brute-force scan of the small delta segment; BM25 stats
 (df, doclen, avdl) are recomputed live per epoch so scores match a rebuild
-bitwise.  Ranked modes under mutation disarm block-max pruning (the
-quantized tables carry generation-time stats) — the candidate superset
-contract still holds, and the exact float rescore restores bit-identity;
-``compact()`` re-arms pruning: it merge-sorts generation-minus-tombstones
+bitwise.  Ranked modes under a delta-bearing epoch disarm block-max pruning
+(the quantized tables carry generation-time stats) — the candidate superset
+contract still holds, and the exact float rescore restores bit-identity —
+but TOMBSTONE-ONLY epochs (the common few-deletes case) stay armed: deletes
+only shrink df, so every live/generation idf ratio is >= 1, and a per-query
+Q16.16 deflation ``iq = floor(2**16 / Rmax)`` applied to every threshold
+comparison keeps the generation-time upper bounds sound against live scores
+(the full derivation is the re-arm note in ``index/scores.py``; theta0 is
+re-derived from the tombstone-filtered top-code tables via
+``ScoreArena.theta0_live``, and ``BENCH_mutation.json`` tracks
+``ranked_tomb_1pct.blocks_pruned > 0`` as the CI guarantee);
+``compact()`` fully re-arms pruning: it merge-sorts generation-minus-tombstones
 with the delta per term, re-encodes through the codec registry into
 generation ``gid + 1``, and swaps it in atomically — in-flight plans keep
 executing against their pinned generation's arenas (all engine caches are
@@ -83,13 +91,52 @@ host BM25 path bitwise, ties broken by ascending docid — and an OR
 (term, block) work-list entry is *pruned* before decode when its upper bound
 (own block-max + every other occurrence's max code over the block's docid
 range, read from the per-term docid-stripe tables + the margin m) cannot
-reach the static threshold theta0 (the k-th top impact code of the query's
-strongest term): pruned blocks only lose contributions of docs provably
-outside the true top-k.  ``and_scored`` reuses the AND machinery — the
-intersection bitmap gates the score scatter on device and is never
-downloaded.  ``BENCH_query.json`` tracks ``blocks_pruned`` /
-``blocks_scored`` and per-round host syncs (zero on the resident ranked
-path) per mode.
+reach the threshold: first the static theta0 (the k-th top impact code of
+the query's strongest term) on the host, then — **adaptive BMW theta** —
+a per-query threshold PROMOTED on device after every round (the pooled
+k-th statistic of the accumulated sums, ``kernels/topk.pooled_threshold``,
+a sound monotone lower bound on the final k-th sum), which each later
+round's kernels re-test against every entry's staged upper bound so the
+work-list compacts itself with zero per-round host syncs.  Pruned blocks
+only lose contributions of docs provably outside the true top-k.
+``and_scored`` reuses the AND machinery — the intersection bitmap gates the
+score scatter on device and is never downloaded.  ``BENCH_query.json``
+tracks ``blocks_pruned`` / ``blocks_scored`` / ``blocks_dense`` and
+per-round host syncs (zero on the resident ranked path) per mode.
+
+Density-adaptive bitmap blocks (word-parallel dense postings):
+posting blocks whose docids are dense — average gap (span / count) at most
+``repro.core.dense_bitmap.DENSE_GAP``, fitting one 128-word window at a
+4-word-aligned phase — are stored as RAW 128-word bitmaps instead of
+d-gap-compressed streams, per "SIMD Compression and the Intersection of
+Sorted Integers": at that density the fastest intersect is a word-parallel
+AND of the bitmap against the candidate window, with no unpack and no
+prefix-sum at all.  The decision is made once per block at build time
+(``invindex.Generation.build`` asks ``dense_bitmap.eligible(ids)``) and the
+chosen representation travels as a *declared capability*, never an engine
+branch: ``dense_bitmap`` is a registered codec whose ``ArenaLayout``
+declares ``bitmap_words`` / ``is_bitmap`` alongside the ordinary two-column
+(ctrl, data) contract, so
+
+  * the conformance harness / registry lint round-trip it like any codec
+    (a ``"raw"`` wire fallback keeps it total on ineligible streams, and
+    the lint checks the density boundary cases: exactly-at-threshold,
+    singleton, window-overflow);
+  * the device arena (``index/device.py``) and score arena
+    (``index/scores.py``) notice ``is_bitmap(block)`` at staging time and
+    keep, per dense block, its 128-word window + window origin ``w0``
+    (4-word aligned, so column ``w0 * 32`` is a 128-lane-aligned slice) —
+    plus, on the score side, a packed 4096-position code window;
+  * the engine routes each (term, block) work-list entry by a dict lookup
+    (``dense_slot``) into the word-parallel round kernels
+    (``intersect_rounds.dense_round_accumulate``,
+    ``topk.dense_score_round``) while sparse blocks of the same query take
+    the decode path in the same round — exact composition, since each block
+    owns disjoint docids (``BENCH_query.json`` counts the dense-served
+    entries as ``blocks_dense``).
+
+Mixed dense/sparse lists therefore fall out of the registry machinery with
+zero engine special cases, and a new density policy is one codec swap.
 
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a

@@ -220,11 +220,15 @@ class DeviceArena:
 
     def _build_compressed_arenas(self, idx) -> None:
         staging: dict = {}
+        dense_rows, dense_w0 = [], []
+        self.dense_slot: dict = {}
+        words_total = intersect_rounds.bitmap_geometry(idx.n_docs)[0]
         for t, tp in idx.terms.items():
             for bi, (first, encg, enct) in enumerate(tp.blocks):
                 for field, enc, fi in ((0, encg, first), (1, enct, 0)):
                     key = (t, bi, field)
-                    lay = codec_lib.get(enc.codec).arena if enc.n else None
+                    spec = codec_lib.get(enc.codec) if enc.n else None
+                    lay = spec.arena if spec is not None else None
                     if lay is None or not lay.supports(enc):
                         self._loc[key] = (None, -1)
                         continue
@@ -232,7 +236,28 @@ class DeviceArena:
                     if g is None:
                         g = staging[enc.codec] = _ArenaGroup(enc.codec, lay)
                     self._loc[key] = (enc.codec, g.add(enc, fi))
+                    if (field == 0 and lay.bitmap_words
+                            and lay.is_bitmap is not None
+                            and lay.is_bitmap(enc)):
+                        # word-parallel-servable block: stage its raw bitmap
+                        # window realigned to the serving bitmap geometry
+                        # (first window word rounded down to a 4-word phase,
+                        # so the window's column offset is lane-tile aligned;
+                        # clamped so the window stays inside the geometry).
+                        ids = first + np.cumsum(spec.decode_np(enc),
+                                                dtype=np.uint64)
+                        w0 = min((int(ids[0]) >> 5) & ~3,
+                                 words_total - lay.bitmap_words)
+                        bits = np.zeros(lay.bitmap_words * 32, np.uint8)
+                        bits[(ids - np.uint64(w0 * 32)).astype(np.int64)] = 1
+                        self.dense_slot[(t, bi)] = len(dense_rows)
+                        dense_rows.append(np.packbits(
+                            bits, bitorder="little").view(np.uint32))
+                        dense_w0.append(w0)
         self._groups = {name: g.finalize() for name, g in staging.items()}
+        self.dense_w0 = np.asarray(dense_w0, np.int32)
+        self.dense_words = (jnp.asarray(np.stack(dense_rows)) if dense_rows
+                            else None)
 
     def ensure_fused(self) -> "DeviceArena":
         """Build the fused-kernel tile arenas if absent: every block's d-gaps
@@ -401,32 +426,40 @@ class DeviceArena:
             self.stats["fused_blocks"] += len(items)
         return np.concatenate(parts)
 
-    def _fused_rounds(self, pairs: list, cand_tiles, with_scores: bool):
+    def _fused_rounds(self, pairs: list, cand_tiles, with_scores: bool,
+                      ubs=None):
         """One ``segmented_decode_and`` call per bit-width bucket present in
         the work-list (plus, with scores, one ``topk.unpack_codes`` call for
         the bucket's packed score column): the shared body of the AND and
         ranked fused rounds — grouping, n=0 bucket padding, and stats live
-        here exactly once."""
+        here exactly once.  ``ubs`` (optional, aligned with ``pairs``) are
+        per-entry quantized upper bounds the ranked caller threads through to
+        the adaptive-theta masking; they ride the same grouping/padding so
+        the returned array aligns with the output rows (padded rows have
+        n=0 and hit nothing, so their ub value is irrelevant)."""
         sa = self.ensure_scores().scores if with_scores else None
+        if ubs is None:
+            ubs = [0] * len(pairs)
         groups: dict = {}
-        for qs, t, bi in pairs:
+        for (qs, t, bi), ub in zip(pairs, ubs):
             bw, row = self._pk_slot[(t, int(bi))]
             groups.setdefault(bw, []).append(
-                (qs, row, sa.slot[(t, int(bi))] if with_scores else 0))
-        parts: list = [[] for _ in range(4)]        # ids, hits, codes, qs
+                (qs, row, sa.slot[(t, int(bi))] if with_scores else 0, ub))
+        parts: list = [[] for _ in range(5)]   # ids, hits, codes, qs, ubs
         for bw, items in groups.items():
             pk = self._pk[bw]
-            rows = np.asarray([r for _, r, _ in items], np.int64)
+            rows = np.asarray([r for _, r, _, _ in items], np.int64)
             cols = [rows.astype(np.int32),
-                    np.asarray([q for q, _, _ in items], np.int32),
-                    np.asarray([s for _, _, s in items], np.int32),
-                    pk["first"][rows], pk["n"][rows]]
+                    np.asarray([q for q, _, _, _ in items], np.int32),
+                    np.asarray([s for _, _, s, _ in items], np.int32),
+                    pk["first"][rows], pk["n"][rows],
+                    np.asarray([u for _, _, _, u in items], np.int32)]
             w = _bucket(len(items))
             if len(items) < w:   # pad: repeated entries with n=0 hit nothing
                 pad = w - len(items)
                 cols = [np.concatenate([c, np.repeat(c[:1], pad)]) for c in cols]
                 cols[4][-pad:] = 0
-            slots, qs, sslots, firsts, ns = cols
+            slots, qs, sslots, firsts, ns, ub = cols
             ids, hits = intersect_rounds.segmented_decode_and(
                 pk["tiles"], jnp.asarray(slots), jnp.asarray(qs),
                 jnp.asarray(firsts), jnp.asarray(ns), cand_tiles,
@@ -437,12 +470,14 @@ class DeviceArena:
                 codes = topk.unpack_codes(sa.tiles, jnp.asarray(sslots))
                 parts[2].append(codes.reshape(w, -1))
             parts[3].append(qs)
+            parts[4].append(ub)
             self.stats["fused_calls"] += 1
             self.stats["fused_blocks"] += len(items)
         cat = (lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs))
+        ncat = (lambda xs: xs[0] if len(xs) == 1 else np.concatenate(xs))
         return (cat(parts[0]), cat(parts[1]),
                 cat(parts[2]) if with_scores else None,
-                np.concatenate(parts[3]) if len(parts[3]) > 1 else parts[3][0])
+                ncat(parts[3]), ncat(parts[4]))
 
     def fused_round(self, pairs: list, cand_tiles):
         """Segmented fused decode + probe for one device-resident AND round.
@@ -455,15 +490,15 @@ class DeviceArena:
         length, ready for the survivor scatter.  The decoded ids and hit
         masks never touch the host.
         """
-        ids, hits, _, qs = self._fused_rounds(pairs, cand_tiles, False)
+        ids, hits, _, qs, _ = self._fused_rounds(pairs, cand_tiles, False)
         return ids, hits, qs
 
-    def fused_round_scored(self, pairs: list, cand_tiles):
+    def fused_round_scored(self, pairs: list, cand_tiles, ubs=None):
         """Segmented fused decode + probe + score-unpack for one ranked
         round: like :meth:`fused_round` but each work-list entry also runs
         its block's packed score words through the ``kernels/topk`` Pallas
         unpack tile, so the engine can scatter ``codes * hits`` straight into
-        the segmented accumulator.  Returns (ids, hits, codes, qslots); the
-        decoded ids, hit masks, and codes never touch the host.
+        the segmented accumulator.  Returns (ids, hits, codes, qslots, ubs);
+        the decoded ids, hit masks, and codes never touch the host.
         """
-        return self._fused_rounds(pairs, cand_tiles, True)
+        return self._fused_rounds(pairs, cand_tiles, True, ubs)

@@ -103,10 +103,21 @@ _EMPTY_I64 = np.zeros(0, np.int64)
 _EMPTY_I64.setflags(write=False)
 
 # a ranked margin so large the candidate compact keeps EVERY member doc:
-# under a mutation epoch the quantized accumulator uses generation-time
-# impact codes (stale df/avdl), so the theta-margin cut is disarmed and the
-# exact float rescore (live stats) does all the ranking
+# under a delta-bearing mutation epoch the quantized accumulator uses
+# generation-time impact codes (stale df/avdl), so the theta-margin cut is
+# disarmed and the exact float rescore (live stats) does all the ranking.
+# Tombstone-ONLY epochs stay armed through the idf-ratio deflation instead
+# (see the re-arm note in ``repro/index/scores.py``).
 _KEEP_ALL_MARGIN = 1 << 30
+
+# per-entry quantized upper bound so large the adaptive-theta work-list
+# masking never drops the entry (``and_scored`` rounds, whose membership
+# must cover the whole intersection, always scatter)
+_UB_ALWAYS = 1 << 30
+
+# stacked-work-list memo entries kept per engine (each holds a round's
+# gathered device arrays; hot repeated batches skip the restacking)
+_ROUND_CACHE = 32
 
 
 def _merge_disjoint(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -334,6 +345,8 @@ class QueryEngine:
         #   resident ranked path — only the final candidate bitmap syncs)
         # blocks_pruned / blocks_scored: ranked (term, block) work-list
         #   entries dropped by the block-max upper-bound test vs. scattered
+        # blocks_dense: work-list entries served word-parallel from the
+        #   density-adaptive bitmap representation (no unpack / prefix sum)
         # tomb_gates: live-bitmap gates applied on device (uploads, not
         #   downloads — the resident paths stay download-free under deletes)
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
@@ -341,7 +354,11 @@ class QueryEngine:
                           "cand_syncs": 0, "final_syncs": 0,
                           "score_rounds": 0, "score_syncs": 0,
                           "blocks_pruned": 0, "blocks_scored": 0,
-                          "tomb_gates": 0}
+                          "blocks_dense": 0, "tomb_gates": 0}
+        # (gid, kind, work-list) -> the round's gathered device arrays
+        # (docid rows / score rows / dense windows), immutable per
+        # generation; see _round_memo
+        self._round_cache: OrderedDict = OrderedDict()
         if device or fused:
             # deprecated: construct with defaults and call to_device() instead
             warnings.warn(
@@ -685,13 +702,33 @@ class QueryEngine:
                 self.cache.put((e[0], e[1], 2, gid), (row, n))
         return out
 
+    def _round_memo(self, key, build):
+        """Bounded memo for a round's stacked device arrays: identical
+        work-lists (the benchmark loop, hot repeated batches) reuse the
+        gathered rows instead of re-walking caches and re-gathering.  Keys
+        carry the gid, so entries are immutable for their lifetime."""
+        v = self._round_cache.get(key)
+        if v is None:
+            v = build()
+            self._round_cache[key] = v
+            while len(self._round_cache) > _ROUND_CACHE:
+                self._round_cache.popitem(last=False)
+        else:
+            self._round_cache.move_to_end(key)
+        return v
+
     def _stack_worklist(self, entries: list):
         """Shared round discipline for the resident AND and ranked paths:
         dedupe a round's (qslot, term, block) entries, decode the unique
         (term, block) rows once (``_round_rows``), and fan them out to the
         entries with one device gather, padded to the jit bucket (padding
         repeats entry 0 with n=0, which scatters nothing).  Returns
-        (rows, qslots, ns, bucket)."""
+        (rows, qslots, ns, bucket); memoized per (gid, work-list)."""
+        key = (self._cur().gen.gid, "ids", tuple(entries))
+        return self._round_memo(key,
+                                lambda: self._stack_worklist_build(entries))
+
+    def _stack_worklist_build(self, entries: list):
         pairs = [(t, bi) for _, t, bi in entries]
         rows = self._round_rows(pairs)
         ent = list(rows)
@@ -706,6 +743,54 @@ class QueryEngine:
         ns = np.zeros(p, np.int32)
         ns[:len(entries)] = [rows[e][1] for e in pairs]
         return mat[jnp.asarray(sel)], qs, ns, p
+
+    def _stack_dense(self, entries: list, ubs=None, with_codes: bool = False):
+        """Gather a round's dense-bitmap work-list (``repro.core
+        .dense_bitmap`` blocks, selected per block through the arena's
+        ``dense_slot`` capability table): the entries' 128-word posting
+        windows — and, ``with_codes``, their window-aligned score tiles —
+        in one device gather each, padded to the jit bucket.  Returns
+        (words, tiles, qslots, w0, act, ub); padding carries act=False and
+        ub=0, which every dense kernel treats as inert.  The device gathers
+        are memoized per (gid, block-list)."""
+        ctx = self._cur()
+        ar = self._arena_ctx(ctx)
+        n = len(entries)
+        p = _bucket(n)
+        blocks = tuple((t, bi) for _, t, bi in entries)
+
+        def build():
+            sel = np.zeros(p, np.int64)
+            sel[:n] = [ar.dense_slot[b] for b in blocks]
+            words = ar.dense_words[jnp.asarray(sel)]
+            tiles = None
+            if with_codes:
+                sa = ar.ensure_scores().scores
+                srows = np.zeros(p, np.int64)
+                srows[:n] = [sa.dense_slot[b] for b in blocks]
+                tiles = sa.dense_tiles[jnp.asarray(srows)]
+            w0 = np.zeros(p, np.int32)
+            w0[:n] = ar.dense_w0[sel[:n]]
+            return words, tiles, jnp.asarray(w0)
+
+        key = (ctx.gen.gid, "dense", with_codes, blocks)
+        words, tiles, w0 = self._round_memo(key, build)
+        qs = np.zeros(p, np.int32)
+        qs[:n] = [q for q, _, _ in entries]
+        act = np.zeros(p, bool)
+        act[:n] = True
+        ub = np.zeros(p, np.int32)
+        ub[:n] = ubs if ubs is not None else _UB_ALWAYS
+        return (words, tiles, jnp.asarray(qs), w0, jnp.asarray(act),
+                jnp.asarray(ub))
+
+    def _score_rows(self, sa, pairs: list, p: int):
+        """Memoized ``ScoreArena.rows`` for a round's (term, block) work
+        -list, padded to the jit bucket by repeating entry 0 (padded lanes
+        scatter with n=0, so the values are inert)."""
+        key = (self._cur().gen.gid, "codes", p, tuple(pairs))
+        return self._round_memo(
+            key, lambda: sa.rows(pairs + [pairs[0]] * (p - len(pairs))))
 
     def _and_many_resident(self, queries: list,
                            terms: Mapping[int, TermCaps] | None = None,
@@ -749,6 +834,7 @@ class QueryEngine:
         """
         ctx = self._cur()
         idx = ctx.gen
+        ar = self._arena_ctx(ctx)
         nq = len(queries)
         words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         if nq == 0:
@@ -768,19 +854,42 @@ class QueryEngine:
         nqp = _bucket(nq)
         bm = jnp.zeros((nqp, words), jnp.uint32)
 
-        def scatter(pairs, active_idx, probe):
-            """One bitmap_round call: decode rows for `pairs`, probe+scatter."""
+        def run_round(bm, plain, fused_pairs, dense, active_idx, probe):
+            """One committed AND round: every representation split (sparse
+            arena decode, fused Pallas decode, dense bitmap windows) probes
+            the same OLD bitmap and ORs survivors into ONE shared new bitmap
+            — exact because a block is served by exactly one representation,
+            so the splits' docid sets are disjoint — then a single commit
+            folds active rows forward (empty splits leave active rows
+            empty: with no survivors their intersections are empty)."""
             active = np.zeros(nqp, bool)
             active[active_idx] = True
-            if not pairs:
-                # nothing decodes for the active queries: with no survivors
-                # their intersections are simply empty
-                return jnp.where(jnp.asarray(active)[:, None],
-                                 jnp.uint32(0), bm)
-            rows, qs, ns, _ = self._stack_worklist(pairs)
-            return intersect_rounds.bitmap_round(
-                bm, rows, jnp.asarray(qs), jnp.asarray(ns),
-                jnp.asarray(active), probe=probe)
+            new = jnp.zeros_like(bm)
+            if plain:
+                rows, qs, ns, _ = self._stack_worklist(plain)
+                new = intersect_rounds.round_accumulate(
+                    new, rows, jnp.asarray(qs), jnp.asarray(ns), bm,
+                    probe=probe)
+            if fused_pairs:
+                ids, hits, qs = ar.fused_round(
+                    fused_pairs, bm.reshape(nqp * crows, -1))
+                new = intersect_rounds.round_accumulate_masked(
+                    new, ids.reshape(len(qs), -1), jnp.asarray(qs),
+                    hits.reshape(len(qs), -1))
+            if dense:
+                dw, _, dqs, dw0, dact, _ = self._stack_dense(dense)
+                new = intersect_rounds.dense_round_accumulate(
+                    new, dw, dqs, dw0, dact, bm, probe=probe)
+            return intersect_rounds.round_commit(bm, new, jnp.asarray(active))
+
+        def split_dense(pairs):
+            """Route (qslot, t, bi) entries to their serving representation
+            (per-block capability: the arena's dense window table)."""
+            sparse, dense = [], []
+            for e in pairs:
+                (dense if (e[1], e[2]) in ar.dense_slot else sparse).append(e)
+            self.dev_stats["blocks_dense"] += len(dense)
+            return sparse, dense
 
         # round 0: seed every query's bitmap row with its rarest term
         seeds = [i for i, ts in enumerate(qterms)
@@ -790,7 +899,8 @@ class QueryEngine:
                 self.dev_stats["worklist_refs"] += idx.n_blocks(ts[0])
         pairs0 = [(i, qterms[i][0], bi) for i in seeds
                   for bi in range(idx.n_blocks(qterms[i][0]))]
-        bm = scatter(pairs0, seeds, probe=False)
+        plain0, dense0 = split_dense(pairs0)
+        bm = run_round(bm, plain0, [], dense0, seeds, probe=False)
         if ctx.mutated and len(ctx.dead):
             # gate the seed with the epoch's live row: every later round
             # only keeps survivors, so one AND suffices for the whole batch
@@ -806,29 +916,23 @@ class QueryEngine:
             if not active:
                 break
             self.dev_stats["resident_rounds"] += 1
-            plain, fused_pairs, plain_q, fused_q = [], [], [], []
+            plain, fused_pairs, dense = [], [], []
             for i in active:
                 t = qterms[i][r]
                 sel = self._select_blocks_static(t, *cov[i])
                 self.dev_stats["worklist_refs"] += len(sel)
                 f = use_fused and (terms[t].fused if terms is not None
-                                   else self.arena.has_fused(t, sel))
-                (fused_pairs if f else plain).extend(
-                    (i, t, int(bi)) for bi in sel)
-                (fused_q if f else plain_q).append(i)
-            if plain_q:
-                bm = scatter(plain, plain_q, probe=True)
-            if fused_pairs:
-                active_f = np.zeros(nqp, bool)
-                active_f[fused_q] = True
-                ids, hits, qs = self._arena_ctx(ctx).fused_round(
-                    fused_pairs, bm.reshape(nqp * crows, -1))
-                bm = intersect_rounds.bitmap_round_masked(
-                    bm, ids.reshape(len(qs), -1),
-                    jnp.asarray(qs), hits.reshape(len(qs), -1),
-                    jnp.asarray(active_f))
-            elif fused_q:       # all selections empty -> intersection empties
-                bm = scatter([], fused_q, probe=True)
+                                   else ar.has_fused(t, sel))
+                for bi in sel:
+                    e = (i, t, int(bi))
+                    if (t, int(bi)) in ar.dense_slot:
+                        dense.append(e)
+                        self.dev_stats["blocks_dense"] += 1
+                    elif f:
+                        fused_pairs.append(e)
+                    else:
+                        plain.append(e)
+            bm = run_round(bm, plain, fused_pairs, dense, active, probe=True)
             r += 1
 
         return bm, qterms, cov
@@ -982,33 +1086,133 @@ class QueryEngine:
                 scores[sub] += sc
         return topk_select(docs, scores, k)
 
+    def _rescore_batch_blockwise(self, queries: list, cand: list,
+                                 k: int) -> list:
+        """Batch form of :meth:`_score_docs_blockwise`: the per-(term, block)
+        decode + score work is amortized over the WHOLE batch — each term
+        scores the union of its queries' candidates once, then every query
+        accumulates its own docs in query-term order from the shared
+        per-term vectors.  Bitwise identical to mapping
+        :meth:`_score_docs_blockwise` over the batch: same elementwise
+        ``bm25_scores`` values, same per-doc term accumulation order, and a
+        candidate a term doesn't hold adds +0.0 exactly as the host oracle's
+        ``np.where`` does (contributions are strictly positive, so no -0.0
+        can ever sit in an accumulator).  Generation-only, like the
+        per-query form."""
+        union = {}
+        for q, c in zip(queries, cand):
+            if len(c) == 0:
+                continue
+            for t in dict.fromkeys(q):
+                union.setdefault(t, []).append(c)
+        ctx = self._cur()
+        idx = ctx.gen
+        plans, prefetch = [], []
+        for t, parts in union.items():
+            if t not in idx.terms or not idx.terms[t].blocks:
+                continue            # unknown or zero-posting term scores 0
+            docs = (parts[0] if len(parts) == 1
+                    else np.unique(np.concatenate(parts)))
+            firsts = idx.block_firsts(t)
+            bi = np.searchsorted(firsts, docs, side="right") - 1
+            bi = np.where(idx.block_lasts(t)[np.maximum(bi, 0)] >=
+                          docs.astype(np.int64), bi, -1)
+            plans.append((t, docs, bi))
+            if self.arena is not None:
+                prefetch.extend((t, int(b), f)
+                                for b in np.unique(bi[bi >= 0])
+                                for f in (0, 1))
+        if prefetch:
+            self._prefetch_blocks(prefetch)
+        shared = {}
+        for t, docs, bi in plans:
+            df = idx.terms[t].df
+            vals = np.zeros(len(docs))
+            for b in np.unique(bi[bi >= 0]):
+                sel = np.flatnonzero(bi == b)
+                ids, tfs = self.decode_block(t, int(b))
+                pos = np.searchsorted(ids, docs[sel])
+                pos = np.clip(pos, 0, len(ids) - 1)
+                hit = ids[pos] == docs[sel]
+                sub = sel[hit]
+                vals[sub] = bm25_scores(tfs[pos[hit]], ctx.doclen[docs[sub]],
+                                        df, ctx.n_docs, ctx.avdl)
+            shared[t] = (docs, vals)
+        out = []
+        for q, c in zip(queries, cand):
+            if len(c) == 0:
+                out.append([])
+                continue
+            scores = np.zeros(len(c))
+            for t in q:             # query-term order, duplicates kept
+                e = shared.get(t)
+                if e is not None:
+                    docs, vals = e
+                    scores += vals[np.searchsorted(docs, c)]
+            out.append(topk_select(c, scores, k))
+        return out
+
     def and_query_scored(self, terms: list, k: int = 10):
         return self._score_docs(terms, self.and_query(terms), k)
 
     # ---- device-resident ranked top-k (OR / and_scored) --------------------- #
 
-    def _prune_ranked_blocks(self, sa, occs: list, r: int,
-                             theta0: int) -> tuple:
+    def _prune_ranked_blocks(self, sa, occs: list, r: int, theta0: int,
+                             iq: int = 1 << 16) -> tuple:
         """Block-max prune for occurrence ``r`` of an OR query's term list:
         drop blocks whose upper bound — own block-max plus every other
         occurrence's max code over the block's docid range (BMW-style
         aligned bounds, 0 when the other term has no posting there) plus the
         quantization margin — cannot beat ``theta0``.  Dropped blocks only
         lose contributions of docs provably outside the true top-k (see
-        ``repro/index/scores.py``)."""
+        ``repro/index/scores.py``).
+
+        Returns (keep, n_pruned, ub[keep]): the kept blocks' bounds ride to
+        the device, where every later round re-tests them against the
+        adaptively promoted theta (``kernels/topk``) and self-compacts the
+        work-list with zero host syncs.  ``iq`` deflates the static
+        threshold under tombstone-only epochs (Q16.16, 65536 = identity)."""
         t = occs[r]
         gen = self._cur().gen
         nb = gen.n_blocks(t)
-        if theta0 <= 0 or nb == 0:
-            return np.arange(nb), 0
+        if nb == 0:
+            return np.arange(0), 0, _EMPTY_I64
         firsts = gen.block_firsts(t)
         lasts = gen.block_lasts(t)
         base = sa.slot[(t, 0)]          # a term's slots are contiguous
         ub = sa.block_max[base:base + nb].astype(np.int64) + len(occs)
         for t2 in occs[:r] + occs[r + 1:]:
             ub += sa.range_max_many(t2, firsts, lasts)
-        keep = np.flatnonzero(ub > theta0)
-        return keep, nb - len(keep)
+        if theta0 <= 0:
+            return np.arange(nb), 0, ub
+        keep = np.flatnonzero(ub > (theta0 * iq) >> 16)
+        return keep, nb - len(keep), ub[keep]
+
+    def _iq_tomb(self, ts: list, ctx: _ExecCtx) -> int:
+        """Per-query Q16.16 threshold deflation ``floor(2**16 / Rmax)`` for
+        a tombstone-only epoch (the re-arm note in ``repro/index/scores.py``):
+        ``Rmax`` is the worst live/generation idf ratio over the query's
+        terms — deletes only shrink df, so every ratio is >= 1 — and the
+        integer floor is nudged down until ``iq * Rmax <= 2**16``, so float
+        rounding can never push a scaled threshold above theta / Rmax."""
+        n = ctx.n_docs
+        rmax = 1.0
+        for t in ts:
+            tp = ctx.gen.terms.get(t)
+            if tp is None:
+                continue
+            dfg = tp.df
+            dfl = self._df_live(t, ctx)
+            if dfl <= 0 or dfl >= dfg:
+                continue
+            ig = float(np.log(1.0 + (n - dfg + 0.5) / (dfg + 0.5)))
+            il = float(np.log(1.0 + (n - dfl + 0.5) / (dfl + 0.5)))
+            if ig > 0.0 and il > ig:
+                rmax = max(rmax, il / ig)
+        iq = int((1 << 16) / rmax)
+        while iq * rmax > (1 << 16):
+            iq -= 1
+        return max(iq, 1)
 
     def _ranked_resident(self, queries: list, k: int, mode: str,
                          terms: Mapping[int, TermCaps] | None = None,
@@ -1027,14 +1231,28 @@ class QueryEngine:
         rescores exactly: results are bitwise identical to the host path,
         ties broken by ascending docid.
 
-        Under a mutation epoch the quantized tables carry generation-time
-        stats, so the theta cut is disarmed (theta0 = 0, margin so large the
-        compact keeps every member — the candidate set degrades to the full
-        live membership bitmap, still an exact superset) and OR rounds gate
-        with the epoch's live row (``gated=True``: tombstoned docs never
-        enter the accumulator or the membership bitmap — no new downloads).
+        After every round the per-query theta is PROMOTED on device: the
+        pooled k-th statistic of the accumulated state (``kernels/topk
+        .pooled_threshold``) is a sound, monotone lower bound on the final
+        k-th sum, and each work-list entry carries its quantized upper bound
+        to the device, so later rounds drop entries that can no longer beat
+        the promoted theta — the work-list compacts itself against promoted
+        bounds with zero per-round host syncs.
+
+        Under a delta-bearing mutation epoch the quantized tables carry
+        generation-time stats, so the theta cut is disarmed (theta0 = 0,
+        margin so large the compact keeps every member — the candidate set
+        degrades to the full live membership bitmap, still an exact
+        superset) and OR rounds gate with the epoch's live row
+        (``gated=True``: tombstoned docs never enter the accumulator or the
+        membership bitmap — no new downloads).  TOMBSTONE-ONLY epochs stay
+        armed instead: deletes only raise idf, so a per-query Q16.16
+        deflation ``iq = floor(2**16 / Rmax)`` keeps every threshold
+        comparison sound against the generation-time tables (the re-arm
+        note in ``repro/index/scores.py``), with theta0 re-derived from the
+        tombstone-filtered top-code tables (``ScoreArena.theta0_live``).
         The final rescore unions the delta-segment scan per query and runs
-        the live-stat float oracle; a fresh compaction re-arms the pruning.
+        the live-stat float oracle; a fresh compaction re-arms fully.
         """
         ctx = self._cur()
         idx = ctx.gen
@@ -1072,54 +1290,107 @@ class QueryEngine:
             gate_tiles = (eff_gate if eff_gate is not None else
                           jnp.full((nqp, words), jnp.uint32(0xFFFFFFFF))
                           ).reshape(nqp * crows, -1)
+        ar = self.arena
+        # tombstone-only epoch: no delta docs and corpus stats untouched
+        # (deletes never shrink the doc space or rewrite doclens — the
+        # array check guards the doclen-override corner), so pruning stays
+        # armed through the idf-ratio deflation
+        tomb_only = (ctx.mutated and len(ctx.delta) == 0
+                     and ctx.n_docs == idx.n_docs
+                     and np.array_equal(ctx.doclen, idx.doclen))
+        armed = not ctx.mutated or tomb_only
         order = [sorted(ts, key=lambda t: -sa.term_max[t]) for ts in base_ts]
         margins = np.zeros(nqp, np.int32)
-        margins[:nq] = [_KEEP_ALL_MARGIN if ctx.mutated else len(ts)
+        margins[:nq] = [len(ts) if armed else _KEEP_ALL_MARGIN
                         for ts in known]
-        theta0 = [sa.theta0(ts, k) if mode == "or" and not ctx.mutated else 0
-                  for ts in base_ts]
-        for r in range(max((len(ts) for ts in order), default=0)):
-            plain, fused_pairs = [], []
+        iqs = np.full(nqp, 1 << 16, np.int64)
+        if tomb_only:
+            iqs[:nq] = [self._iq_tomb(ts, ctx) if ts else 1 << 16
+                        for ts in known]
+        if mode == "or" and armed:
+            theta0 = [(sa.theta0_live(ts, k, ctx.dead) if tomb_only
+                       else sa.theta0(ts, k)) for ts in base_ts]
+        else:
+            theta0 = [0] * nq
+        th0 = np.zeros(nqp, np.uint32)
+        th0[:nq] = theta0
+        theta_dev = jnp.asarray(th0)
+        iq_dev = jnp.asarray(iqs.astype(np.uint32))
+        nrounds = max((len(ts) for ts in order), default=0)
+        for r in range(nrounds):
+            plain, fused_pairs, dense = [], [], []
+            plain_ub, fused_ub, dense_ub = [], [], []
             for i in range(nq):
                 ts = order[i]
                 if len(ts) <= r or (cov is not None and i not in cov):
                     continue        # done, or AND seed empty -> nothing scores
                 t = ts[r]
                 if mode == "or":
-                    sel, pruned = self._prune_ranked_blocks(sa, ts, r, theta0[i])
+                    sel, pruned, ubs_i = self._prune_ranked_blocks(
+                        sa, ts, r, theta0[i], int(iqs[i]))
                 else:
-                    sel, pruned = self._select_blocks_static(t, *cov[i]), 0
+                    sel, pruned, ubs_i = (
+                        self._select_blocks_static(t, *cov[i]), 0, None)
                 self.dev_stats["blocks_pruned"] += pruned
                 self.dev_stats["blocks_scored"] += len(sel)
                 f = use_fused and (terms[t].fused if terms is not None
-                                   else self.arena.has_fused(t, sel))
-                (fused_pairs if f else plain).extend(
-                    (i, t, int(bi)) for bi in sel)
+                                   else ar.has_fused(t, sel))
+                for j, bi in enumerate(sel):
+                    e = (i, t, int(bi))
+                    u = int(ubs_i[j]) if ubs_i is not None else _UB_ALWAYS
+                    if ((t, int(bi)) in ar.dense_slot
+                            and (t, int(bi)) in sa.dense_slot):
+                        dense.append(e)
+                        dense_ub.append(u)
+                        self.dev_stats["blocks_dense"] += 1
+                    elif f:
+                        fused_pairs.append(e)
+                        fused_ub.append(u)
+                    else:
+                        plain.append(e)
+                        plain_ub.append(u)
             self.dev_stats["score_rounds"] += 1
             if plain:
                 rows, qs, ns, p = self._stack_worklist(plain)
-                pairs = [(t, bi) for _, t, bi in plain]
-                codes = sa.rows(pairs + [pairs[0]] * (p - len(pairs)))
+                codes = self._score_rows(sa, [(t, bi) for _, t, bi in plain],
+                                         p)
+                ubp = np.zeros(p, np.int32)
+                ubp[:len(plain)] = plain_ub
                 acc, member = topk.score_round(
                     acc, member, rows, jnp.asarray(qs), codes,
-                    jnp.asarray(ns), eff_gate if eff_gate is not None else member,
+                    jnp.asarray(ns),
+                    eff_gate if eff_gate is not None else member,
+                    jnp.asarray(ubp), theta_dev, iq_dev,
                     gated=eff_gate is not None)
             if fused_pairs:
-                ids, hits, codes, qs = self.arena.fused_round_scored(
-                    fused_pairs, gate_tiles)
+                ids, hits, codes, qs, ubf = ar.fused_round_scored(
+                    fused_pairs, gate_tiles, fused_ub)
                 acc, member = topk.score_round_masked(
                     acc, member, ids.reshape(len(qs), -1), jnp.asarray(qs),
-                    codes.reshape(len(qs), -1), hits.reshape(len(qs), -1))
+                    codes.reshape(len(qs), -1), hits.reshape(len(qs), -1),
+                    jnp.asarray(ubf), theta_dev, iq_dev)
+            if dense:
+                dw, dtiles, dqs, dw0, _, dub = self._stack_dense(
+                    dense, dense_ub, with_codes=True)
+                acc, member = topk.dense_score_round(
+                    acc, member, dtiles, dw, dqs, dw0, dub, theta_dev,
+                    iq_dev, eff_gate if eff_gate is not None else member,
+                    gated=eff_gate is not None)
+            if mode == "or" and armed and k <= width // 32 and r + 1 < nrounds:
+                # adaptive promotion: the pooled k-th is a sound, monotone
+                # lower bound on the final k-th sum (sound only with the
+                # full k — fewer pooled groups than k would over-promote)
+                theta_dev = jnp.maximum(theta_dev,
+                                        topk.pooled_threshold(acc, k))
         theta = topk.topk_threshold(acc, min(k, width))
         cand_bm = topk.candidate_bitmap(acc, member, theta,
-                                        jnp.asarray(margins))
+                                        jnp.asarray(margins), iq_dev)
         # the single host copy: candidate bitmaps -> exact float rescore
         self.dev_stats["final_syncs"] += 1
         cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
                                             idx.n_docs)
         if not ctx.mutated:
-            return [self._score_docs_blockwise(q, c, k)
-                    for q, c in zip(queries, cand)]
+            return self._rescore_batch_blockwise(queries, cand, k)
         out = []
         for i, (q, c) in enumerate(zip(queries, cand)):
             if mode == "or":

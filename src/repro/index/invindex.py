@@ -101,9 +101,11 @@ class Generation:
     @staticmethod
     def build(doclen: np.ndarray, postings: dict,
               codec: str = "group_simple", gid: int = 0) -> "Generation":
+        from repro.core import dense_bitmap   # the density policy lives there
         from .scores import bm25_scores   # local: scores sits above invindex
         spec = codec_lib.get(codec)
         short = codec_lib.get(SHORT_CODEC)
+        dense = codec_lib.get(dense_bitmap.NAME)
         doclen = np.asarray(doclen)
         n_docs = len(doclen)
         # built empty-first so the impact tables read the one cached avdl
@@ -111,14 +113,20 @@ class Generation:
         avdl = gen.avdl
         terms = gen.terms
         for t, (docids, tfs) in postings.items():
-            use = spec if len(docids) >= SHORT else short
+            base = spec if len(docids) >= SHORT else short
             blocks, lasts, bmax = [], [], []
             for i in range(0, len(docids), SKIP):
                 ids = docids[i:i + SKIP]
+                # density decision, per block at build time: past the cutoff
+                # the docid stream is stored as a raw 128-word bitmap and
+                # served word-parallel; everything downstream discovers the
+                # choice through the registry (the Encoded names its codec)
+                use = dense if dense_bitmap.eligible(ids) else base
                 gaps = dgap_encode_np(ids)
                 gaps = gaps.copy()
                 gaps[0] = 0                      # first docid kept in the skip entry
-                blocks.append((int(ids[0]), use.encode(gaps), use.encode(tfs[i:i + SKIP])))
+                # TFs are not a sorted docid stream: always the base codec
+                blocks.append((int(ids[0]), use.encode(gaps), base.encode(tfs[i:i + SKIP])))
                 lasts.append(int(ids[-1]))
                 # WAND block-max metadata, from the raw postings (no decode)
                 sc = bm25_scores(tfs[i:i + SKIP], doclen[ids], len(docids),

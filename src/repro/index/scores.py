@@ -47,13 +47,36 @@ contributions of docs that are provably outside the true top-k.
 
 Mutation epochs: every table above is computed from one generation's corpus
 stats (df, doclen, avdl) and rebuilt per generation at ``compact()`` time —
-never patched in place.  Between compactions the engine serves mutation
-epochs with pruning *disarmed* (``theta0 = 0`` and a keep-all margin): the
-generation-time codes then act only as membership markers, the candidate set
-degenerates to the full live membership superset, and the exact float
-rescore — which recomputes :func:`bm25_scores` from the epoch's *live* df /
-doclen / avdl — restores bitwise parity with a from-scratch rebuild.  The
-margin contract is unaffected; compaction re-arms pruning with fresh tables.
+never patched in place.  Between compactions, epochs that carry a delta
+segment (or changed doclens) are served with pruning *disarmed* (``theta0 =
+0`` and a keep-all margin): the generation-time codes then act only as
+membership markers, the candidate set degenerates to the full live
+membership superset, and the exact float rescore — which recomputes
+:func:`bm25_scores` from the epoch's *live* df / doclen / avdl — restores
+bitwise parity with a from-scratch rebuild.
+
+**Tombstone-only epochs keep pruning armed.**  When the only mutation is
+deletes (no delta docs, doclen/avdl unchanged), the live score of doc d is
+``S' = sum_t R_t * s_t(d)`` where ``R_t = idf_live(t) / idf_gen(t) >= 1``
+(deletes can only shrink df, which only raises idf; the tf/doclen factor is
+untouched).  With ``Rmax = max_t R_t`` over the query's terms and the live
+-gated accumulator (tombstoned docs never enter, so every quantized sum C is
+a live doc's):
+
+    C * delta <= S' < Rmax * delta * (C + m)
+
+so the k-th largest live quantized sum ``theta`` still bounds the k-th best
+live score by ``theta * delta``, and every true-top-k doc has
+``C > theta / Rmax - m``.  The engine carries ``iq = floor(2**16 / Rmax)``
+as a per-query Q16.16 deflation: thresholds compare against
+``(theta * iq) >> 16 <= theta / Rmax``, which keeps both the block-max prune
+and the candidate compact sound with the *generation-time* tables — blocks
+whose upper bound cannot beat the deflated theta only lose docs provably
+outside the live top-k.  The static seed ``theta0`` comes from
+:meth:`ScoreArena.theta0_live`: the per-term top-code tables carry their
+docids (``term_top_ids``) so tombstoned entries are filtered before taking
+the k-th survivor.  Delta epochs still disarm as above; compaction re-arms
+with fresh tables either way.
 """
 
 from __future__ import annotations
@@ -62,8 +85,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.codec import ARENA_BLOCK, ArenaColumn
+from repro.core.codec import ARENA_BLOCK, ArenaColumn, get as codec_get
 from repro.kernels.decode_fused import pack_gaps
+from repro.kernels.intersect_rounds import bitmap_geometry
 
 K1, B = 1.2, 0.75
 
@@ -145,6 +169,20 @@ class ScoreArena:
     slot:      {(term, block) -> s}.
     term_max:  {term -> int} max code over the term.
     term_tops: {term -> int32[<=TOP_TABLE]} top codes sorted descending.
+    term_top_ids: {term -> uint32[<=TOP_TABLE]} the docids carrying those
+               codes (same order; code ties broken by ascending docid), so a
+               tombstone-only epoch can filter dead entries and re-derive a
+               sound theta0 (:meth:`theta0_live`).
+    dense_slot / dense_w0 / dense_tiles: blocks whose docid stream is
+               word-parallel servable (the posting codec declares
+               ``ArenaLayout.bitmap_words`` and the block is in bitmap
+               format) additionally get a *window-aligned* code tile: (D,
+               1024) uint32, window position p (docid ``w0 * 32 + p``) at
+               word ``p >> 2``, bits ``8 * (p & 3)`` — the layout
+               ``kernels/topk.dense_score_round`` adds as one contiguous
+               4096-column window, no unpack/scatter.  ``w0`` follows the
+               device arena's 4-word-aligned clamp, so both views of a dense
+               block agree on the window.
     stripes:   {term -> int32[n_stripes]} max code per fixed docid stripe of
                ``stripe_width`` docids — the range bound for block-max
                pruning.  Posting blocks of a sparse term span the whole
@@ -169,14 +207,18 @@ class ScoreArena:
         # docid stripes sized for ~STRIPE_TARGET range-bound cells per index
         self.stripe_width = max(STRIPE_MIN, -(-n_docs // STRIPE_TARGET))
         n_stripes = max(1, -(-n_docs // self.stripe_width))
+        words_total = bitmap_geometry(n_docs)[0]
         # pass 2: quantize per-posting impacts into the packed column
         tiles, bmax = [], []
+        dense_tiles, dense_w0 = [], []
         self.slot: dict = {}
+        self.dense_slot: dict = {}
         self.term_max: dict = {}
         self.term_tops: dict = {}
+        self.term_top_ids: dict = {}
         self.stripes: dict = {}
         for t, tp in idx.terms.items():
-            codes_all = []
+            codes_all, ids_all = [], []
             stripe = np.zeros(n_stripes, np.int32)
             for bi in range(len(tp.blocks)):
                 ids, tfs = idx.decode_block(t, bi)
@@ -187,17 +229,39 @@ class ScoreArena:
                 tiles.append(pack_gaps(codes, 8)[0])
                 bmax.append(int(codes.max(initial=0)))
                 codes_all.append(codes)
+                ids_all.append(ids)
                 np.maximum.at(stripe, ids // self.stripe_width,
                               codes.astype(np.int32))
+                encg = tp.blocks[bi][1]
+                lay = codec_get(encg.codec).arena
+                if (lay is not None and lay.bitmap_words
+                        and lay.is_bitmap is not None and lay.is_bitmap(encg)):
+                    # window-aligned code tile for word-parallel serving:
+                    # same w0 formula as the device arena's dense windows
+                    bw = lay.bitmap_words
+                    w0 = min((int(ids[0]) >> 5) & ~3, words_total - bw)
+                    pos = ids.astype(np.int64) - w0 * 32
+                    tile = np.zeros(bw * 8, np.uint32)     # bw*32 / 4 words
+                    np.bitwise_or.at(tile, pos >> 2,
+                                     codes << ((pos & 3) * 8).astype(np.uint32))
+                    self.dense_slot[(t, bi)] = len(dense_tiles)
+                    dense_tiles.append(tile)
+                    dense_w0.append(w0)
             cat = (np.concatenate(codes_all) if codes_all
                    else np.zeros(0, np.uint32))
+            ids_cat = (np.concatenate(ids_all) if ids_all
+                       else np.zeros(0, np.uint32))
             self.term_max[t] = int(cat.max(initial=0))
-            tops = np.sort(cat)[::-1][:TOP_TABLE].astype(np.int32)
-            self.term_tops[t] = tops
+            order = np.lexsort((ids_cat, -cat.astype(np.int64)))[:TOP_TABLE]
+            self.term_tops[t] = cat[order].astype(np.int32)
+            self.term_top_ids[t] = ids_cat[order].astype(np.uint32)
             self.stripes[t] = stripe
         self.block_max = np.asarray(bmax, np.int32)
         self.tiles = (jnp.asarray(np.stack(tiles)) if tiles
                       else jnp.zeros((1, SCORE_WORDS), jnp.uint32))
+        self.dense_w0 = np.asarray(dense_w0, np.int32)
+        self.dense_tiles = (jnp.asarray(np.stack(dense_tiles)) if dense_tiles
+                            else None)
 
     @classmethod
     def from_index(cls, idx) -> "ScoreArena":
@@ -224,6 +288,26 @@ class ScoreArena:
             tops = self.term_tops.get(t)
             if tops is not None and k <= len(tops):
                 best = max(best, int(tops[k - 1]))
+        return best
+
+    def theta0_live(self, terms: list, k: int, dead: np.ndarray) -> int:
+        """:meth:`theta0` for a tombstone-only epoch: tombstoned entries are
+        filtered out of the per-term top-code table (``term_top_ids``)
+        before taking the k-th survivor, so the k docs backing the bound are
+        all live.  Sound but weaker than a rebuild's table when more than
+        ``TOP_TABLE - k`` of a term's top codes are dead (the k-th survivor
+        may fall off the table — then that term contributes 0)."""
+        if len(dead) == 0:
+            return self.theta0(terms, k)
+        best = 0
+        for t in terms:
+            tops = self.term_tops.get(t)
+            if tops is None or not len(tops):
+                continue
+            alive = tops[~np.isin(self.term_top_ids[t].astype(np.int64),
+                                  dead)]
+            if k <= len(alive):
+                best = max(best, int(alive[k - 1]))
         return best
 
     def range_max(self, t: int, lo: int, hi: int) -> int:

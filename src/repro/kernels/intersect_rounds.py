@@ -18,7 +18,16 @@ vectorized; this module is that pipeline's state + kernels:
     directly as padded (out_width,) docid rows), and survivors are scattered
     into the *new* bitmap.  Distinct docids per (query, term) guarantee the
     scatter-add is an exact bitwise OR.  Inactive queries carry their segment
-    forward untouched.
+    forward untouched.  When one round mixes representations (sparse arena
+    decode, fused Pallas decode, dense bitmap windows), the round splits into
+    ``round_accumulate*`` calls that all probe the *old* bitmap and OR
+    survivors into one shared *new* bitmap — sound because a block is served
+    by exactly one representation, so the calls' docid sets are disjoint —
+    followed by a single ``round_commit``.
+  * ``dense_round_accumulate`` — the density-adaptive representation's round
+    (``repro.core.dense_bitmap``): a dense block arrives as its raw 128-word
+    window, is ANDed word-parallel against the query's old-bitmap window and
+    committed back — no unpack, no prefix-sum, no per-posting lanes at all.
   * ``segmented_decode_and`` — the Pallas form for the fused placement: the
     ``kernels/decode_fused`` unpack + prefix-sum + bitmap-probe kernel,
     generalized so every work-list entry selects *its own query's* candidate
@@ -49,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import accumulate
 from .bitpack import LANES, _mask, auto_interpret
 from .decode_fused import BLOCK_ROWS, rows_per_block
 
@@ -85,15 +95,65 @@ def pack_live_words(dead: np.ndarray, n_docs: int, words: int) -> np.ndarray:
 def _scatter_survivors(bm, ids, qslot, surv):
     """OR survivor docids into a fresh bitmap: scatter-add is exact because
     every (query, term) contributes each docid at most once per round."""
-    word = (ids >> 5).astype(jnp.int32)
-    bit = (ids & 31).astype(jnp.uint32)
-    contrib = jnp.where(surv, jnp.uint32(1) << bit, jnp.uint32(0))
-    return jnp.zeros_like(bm).at[qslot[:, None], word].add(contrib)
+    return accumulate.scatter_bits(bm, ids, qslot, surv)
+
+
+@functools.partial(jax.jit, static_argnames=("probe",))
+def round_accumulate(new, ids, qslot, ns, bm_old, *, probe: bool = True):
+    """Probe ``bm_old``, OR survivors into the shared ``new`` bitmap.
+
+    One AND round may split across several accumulate calls (sparse arena
+    decode, fused Pallas decode, dense windows) — every call probes the same
+    *old* state and adds into the same *new* state, and the calls' docid
+    sets are disjoint, so the adds compose into an exact OR regardless of
+    call order.  ``round_commit`` folds the result back per query.
+    """
+    lane = jnp.arange(ids.shape[1], dtype=jnp.int32)
+    surv = lane[None, :] < ns[:, None]
+    if probe:
+        word = (ids >> 5).astype(jnp.int32)
+        bit = (ids & 31).astype(jnp.uint32)
+        hit = (bm_old[qslot[:, None], word] >> bit) & jnp.uint32(1)
+        surv = surv & (hit == 1)
+    return new | _scatter_survivors(new, ids, qslot, surv)
+
+
+@jax.jit
+def round_accumulate_masked(new, ids, qslot, hits):
+    """:func:`round_accumulate` with the probe already applied — ``hits`` is
+    the per-lane survivor mask a fused kernel produced."""
+    return new | _scatter_survivors(new, ids, qslot, hits != 0)
+
+
+@functools.partial(jax.jit, static_argnames=("probe",))
+def dense_round_accumulate(new, words, qslot, w0, act, bm_old, *,
+                           probe: bool = True):
+    """Dense-bitmap blocks' AND round: pure word-parallel bitmap algebra.
+
+    words: (P, 128) uint32 — each entry's posting window
+           (``repro.core.dense_bitmap`` words at the arena's 4-word phase).
+    w0:    (P,) int32 — the window's first word in the bitmap geometry.
+    act:   (P,) bool — live entries (False for jit padding).
+
+    The probe is 128 word ANDs against the query's old-bitmap window — no
+    unpack, no prefix-sum, no per-posting lanes.
+    """
+    surv = words
+    if probe:
+        surv = surv & accumulate.dense_window_gather(bm_old, qslot, w0)
+    return accumulate.dense_window_add(new, surv, qslot, w0, act)
+
+
+@jax.jit
+def round_commit(bm_old, new, active):
+    """Fold a round's accumulated ``new`` bitmap back into the batch state:
+    active queries take their new segment, inactive rows keep the old one."""
+    return jnp.where(active[:, None], new, bm_old)
 
 
 @functools.partial(jax.jit, static_argnames=("probe",))
 def bitmap_round(bm, ids, qslot, ns, active, *, probe: bool = True):
-    """One device-resident AND round over the whole batch.
+    """One single-call device-resident AND round over the whole batch.
 
     bm:     (Q, words) uint32 — segmented candidate bitmap (old state).
     ids:    (P, out_width) uint32 — decoded docid rows, one per work-list
@@ -104,25 +164,20 @@ def bitmap_round(bm, ids, qslot, ns, active, *, probe: bool = True):
             their old segment.
     probe:  False builds the seed bitmap (round 0: no old candidates yet).
 
-    Returns the new (Q, words) bitmap, still on device.
+    Returns the new (Q, words) bitmap, still on device.  (The accumulate /
+    commit split above is the multi-call generalization of this.)
     """
-    lane = jnp.arange(ids.shape[1], dtype=jnp.int32)
-    surv = lane[None, :] < ns[:, None]
-    if probe:
-        word = (ids >> 5).astype(jnp.int32)
-        bit = (ids & 31).astype(jnp.uint32)
-        hit = (bm[qslot[:, None], word] >> bit) & jnp.uint32(1)
-        surv = surv & (hit == 1)
-    new = _scatter_survivors(bm, ids, qslot, surv)
-    return jnp.where(active[:, None], new, bm)
+    new = round_accumulate(jnp.zeros_like(bm), ids, qslot, ns, bm,
+                           probe=probe)
+    return round_commit(bm, new, active)
 
 
 @jax.jit
 def bitmap_round_masked(bm, ids, qslot, hits, active):
     """Like :func:`bitmap_round` but with the probe already applied — ``hits``
     is the per-lane survivor mask a fused kernel produced."""
-    new = _scatter_survivors(bm, ids, qslot, hits != 0)
-    return jnp.where(active[:, None], new, bm)
+    new = round_accumulate_masked(jnp.zeros_like(bm), ids, qslot, hits)
+    return round_commit(bm, new, active)
 
 
 # --------------------------------------------------------------------------- #

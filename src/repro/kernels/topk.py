@@ -22,7 +22,22 @@ score accumulator next to them:
     code sum is the threshold theta; the compact keeps every member doc with
     ``acc >= theta - margin`` (the quantization margin of
     ``repro.index.scores`` — a provable superset of the true float top-k)
-    packed as a bitmap, which is the batch's single host sync.
+    packed as a bitmap, which is the batch's single host sync.  The k-th
+    statistic is found by a per-bit binary descend over rank counts instead
+    of ``lax.top_k`` — a sort-free fixed 16-step reduce that is the single
+    biggest ranked-path cost on the XLA lowering, and exact for every
+    quantized sum below 2**16 (above, it saturates low, which only widens
+    the candidate superset).
+  * ``pooled_threshold`` — the cheap per-round form of the same statistic
+    for **adaptive theta promotion**: the k-th largest *32-group pooled
+    maximum*.  The top-k pooled values are maxima of k distinct groups,
+    hence k distinct accumulator entries, so the pooled k-th is a sound
+    lower bound on the true k-th — and the accumulator only grows across
+    rounds, so ``theta = max(theta, pooled_threshold(acc, k))`` after every
+    round is monotone and never exceeds the final k-th sum.  Rounds mask
+    work-list entries whose precomputed upper bound cannot beat the promoted
+    theta (``ub <= (theta * iq) >> 16``) entirely on device: the work-list
+    compacts itself against promoted bounds with zero per-round host syncs.
   * ``unpack_codes`` — the Pallas tile for the score side of the fused
     placement: each grid step DMAs one block's packed (1, 128) score words
     (slot selected by a scalar-prefetched work-list array, double-buffered
@@ -54,8 +69,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import accumulate
 from .bitpack import LANES, auto_interpret
 from .decode_fused import BLOCK_ROWS
+
+THRESH_BITS = 16        # binary-descend range: exact for sums < 2**16
 
 
 def accum_width(n_docs: int) -> int:
@@ -66,20 +84,34 @@ def accum_width(n_docs: int) -> int:
     return bitmap_geometry(n_docs)[0] * 32
 
 
+def _scale_q16(theta, iq):
+    """floor(theta * iq / 2**16) per query, exact in 32-bit arithmetic.
+
+    ``iq`` is a Q16.16 scale in [1, 2**16] (65536 = identity; smaller values
+    deflate theta to stay a sound bound when tombstones raise live idf — see
+    ``repro/index/scores.py``).  Split theta into hi/lo 16-bit halves so no
+    intermediate exceeds uint32: hi * iq is already an integer multiple of
+    the floor, and (lo * iq) >> 16 supplies the exact remainder floor.
+    """
+    t = theta.astype(jnp.uint32)
+    s = iq.astype(jnp.uint32)
+    return ((t >> 16) * s + (((t & jnp.uint32(0xFFFF)) * s) >> 16)).astype(
+        jnp.int32)
+
+
 def _scatter(acc, member, ids, qslot, codes, surv):
     """Exact scatter: per round a (query, term occurrence) contributes every
     docid at most once, so the integer add is a plain sum and the bit add is
     an exact OR."""
     contrib = jnp.where(surv, codes, jnp.uint32(0))
-    acc = acc.at[qslot[:, None], ids].add(contrib)
-    word = (ids >> 5).astype(jnp.int32)
-    bits = jnp.where(surv, jnp.uint32(1) << (ids & 31), jnp.uint32(0))
-    mem = jnp.zeros_like(member).at[qslot[:, None], word].add(bits)
+    acc = accumulate.scatter_add(acc, ids, qslot, contrib)
+    mem = accumulate.scatter_bits(member, ids, qslot, surv)
     return acc, member | mem
 
 
 @functools.partial(jax.jit, static_argnames=("gated",))
-def score_round(acc, member, ids, qslot, codes, ns, gate, *, gated: bool):
+def score_round(acc, member, ids, qslot, codes, ns, gate, ub, theta, iq, *,
+                gated: bool):
     """One ranked round over the whole batch.
 
     acc:    (Q, width) uint32 — segmented score accumulator (old state).
@@ -90,9 +122,18 @@ def score_round(acc, member, ids, qslot, codes, ns, gate, *, gated: bool):
     ns:     (P,) int32 — valid posting count per entry (0 for jit padding).
     gate:   (Q, words) uint32 — AND-result bitmap; probed when ``gated``
             (the ``and_scored`` path) so only intersection docs accumulate.
+    ub:     (P,) int32 — quantized upper bound of the entry's block against
+            its query (block max + margin + other terms' range maxes); the
+            entry is skipped when it cannot beat the promoted theta.
+            Entries that must always run carry a huge ub.
+    theta:  (Q,) uint32 — promoted per-query threshold (0 before promotion).
+    iq:     (Q,) uint32 — Q16.16 idf-ratio deflation (65536 = identity).
 
-    Returns (acc, member), both still on device.
+    Returns (acc, member), both still on device.  Dropping an entry with
+    ``ub <= scaled theta`` is sound: every doc in it ends below
+    theta_final - margin, outside the candidate superset.
     """
+    ns = jnp.where(ub > _scale_q16(theta, iq)[qslot], ns, 0)
     lane = jnp.arange(ids.shape[1], dtype=jnp.int32)
     surv = lane[None, :] < ns[:, None]
     if gated:
@@ -103,31 +144,101 @@ def score_round(acc, member, ids, qslot, codes, ns, gate, *, gated: bool):
 
 
 @jax.jit
-def score_round_masked(acc, member, ids, qslot, codes, hits):
+def score_round_masked(acc, member, ids, qslot, codes, hits, ub, theta, iq):
     """Like :func:`score_round` with the probe already applied — ``hits`` is
     the per-lane survivor mask the fused Pallas decode produced."""
-    return _scatter(acc, member, ids, qslot, codes, hits != 0)
+    keep = ub > _scale_q16(theta, iq)[qslot]
+    return _scatter(acc, member, ids, qslot, codes,
+                    (hits != 0) & keep[:, None])
+
+
+def _kth_descend(vals, k: int):
+    """Largest t with |{v : v >= t}| >= k, by THRESH_BITS halving steps.
+
+    That t *is* the k-th largest value when it fits the bit range; when
+    fewer than k values are >= 1 the descend stays at 0 (keep-everything),
+    which is the right degenerate answer for k > candidate count."""
+    a = vals.astype(jnp.int32)
+    lo = jnp.zeros(vals.shape[0], jnp.int32)
+    for b in range(THRESH_BITS - 1, -1, -1):
+        mid = lo + (1 << b)
+        cnt = jnp.sum(a >= mid[:, None], axis=1, dtype=jnp.int32)
+        lo = jnp.where(cnt >= k, mid, lo)
+    return lo.astype(jnp.uint32)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def topk_threshold(acc, k: int):
     """Per-query threshold theta: the k-th largest accumulated code sum."""
-    return jax.lax.top_k(acc, k)[0][:, -1]
+    return _kth_descend(acc, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pooled_threshold(acc, k: int):
+    """Sound per-round lower bound on the k-th largest sum, over the 32-group
+    max pool (32x fewer rank-count columns than :func:`topk_threshold`)."""
+    q, width = acc.shape
+    pooled = acc.reshape(q, width // 32, 32).max(axis=-1)
+    return _kth_descend(pooled, k)
 
 
 @jax.jit
-def candidate_bitmap(acc, member, theta, margin):
-    """Compact the accumulator against (theta - margin) into a packed
-    candidate bitmap — every member doc whose quantized sum could still reach
-    the true top-k (the provable superset of ``repro/index/scores.py``)."""
+def candidate_bitmap(acc, member, theta, margin, iq):
+    """Compact the accumulator against (theta * iq / 2**16 - margin) into a
+    packed candidate bitmap — every member doc whose quantized sum could
+    still reach the true top-k (the provable superset of
+    ``repro/index/scores.py``; ``iq`` deflates theta under tombstone epochs,
+    65536 = identity)."""
     # int32 is exact here: sums of u8 codes stay far below 2**31
-    thr = theta.astype(jnp.int32) - margin.astype(jnp.int32)
+    thr = _scale_q16(theta, iq) - margin.astype(jnp.int32)
     keep = acc.astype(jnp.int32) >= thr[:, None]
     q, width = acc.shape
     bits = keep.reshape(q, width // 32, 32).astype(jnp.uint32)
     words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
         axis=-1, dtype=jnp.uint32)
     return words & member
+
+
+# --------------------------------------------------------------------------- #
+# dense-bitmap score round (density-adaptive posting blocks)
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("gated",))
+def dense_score_round(acc, member, tiles, words, qslot, w0, ub, theta, iq,
+                      gate, *, gated: bool):
+    """One ranked round over the batch's dense-bitmap work-list entries.
+
+    tiles: (P, 1024) uint32 — packed code windows, four u8 codes per word in
+           window-position order (position p lives in word p >> 2, byte
+           p & 3); positions with no posting carry code 0.
+    words: (P, 128) uint32 — the entry's posting bitmap window
+           (``dense_bitmap`` words, realigned to the arena's 4-word phase).
+    w0:    (P,) int32 — first word of the entry's window in the bitmap
+           geometry; 4-word aligned, so column w0 * 32 is lane-tile aligned.
+
+    No unpack/prefix-sum: codes add as one contiguous 4096-column window
+    (:func:`repro.kernels.accumulate.dense_add`) and membership/gating stay
+    word-parallel on the packed windows.  Composes exactly with the sparse
+    :func:`score_round` of the same round — integer adds sum and the bit
+    adds OR, whichever call order.
+    """
+    act = ub > _scale_q16(theta, iq)[qslot]
+    p = tiles.shape[0]
+    codes = ((tiles[:, :, None] >> (jnp.uint32(8) *
+                                    jnp.arange(4, dtype=jnp.uint32)))
+             & jnp.uint32(0xFF)).reshape(p, -1)
+    win = words
+    if gated:
+        win = win & accumulate.dense_window_gather(gate, qslot, w0)
+        bits = ((win[:, :, None] >> jnp.arange(32, dtype=jnp.uint32))
+                & jnp.uint32(1)).reshape(p, -1)
+        codes = codes * bits
+    acc = accumulate.dense_add(acc, codes, qslot,
+                               (w0 * 32).astype(jnp.int32), act)
+    mem = accumulate.dense_window_add(jnp.zeros_like(member), win, qslot,
+                                      w0, act)
+    return acc, member | mem
 
 
 # --------------------------------------------------------------------------- #

@@ -112,11 +112,12 @@ def test_non_arena_codec_falls_back_to_host_oracle():
     for (t, bi, f), a in zip(entries, got):
         want = idx.decode_block_ids(t, bi) if f == 0 else idx.decode_block_tfs(t, bi)
         np.testing.assert_array_equal(a, want, err_msg=f"varbyte/{t}/{bi}/{f}")
-    # varbyte declares no arena; its blocks decode on host, while the
-    # stream_vbyte short lists still go native
+    # varbyte declares no arena; its sparse blocks decode on host, while the
+    # stream_vbyte short lists and the density-promoted bitmap blocks still
+    # go native
     assert arena.stats["blocks_host"] > 0
     assert arena.stats["blocks_device"] > 0
-    assert not arena.covers((4, 0, 0))       # df=512 term -> varbyte
+    assert not arena.covers((2, 0, 0))       # df=64 sparse term -> varbyte
     assert arena.covers((0, 0, 0))           # df=12 term -> stream_vbyte
 
 
@@ -127,7 +128,9 @@ def test_plan_resolves_placement_and_term_caps():
     assert isinstance(p, ExecutionPlan) and p.placement == "host"
     assert 999 not in p.terms                # unknown terms omitted
     assert p.terms[0].codec == SHORT_CODEC   # df=12 -> short-list fast path
-    assert p.terms[4].codec == "group_simple"
+    # df=512 over 1500 docs sits past the density cutoff, so build stored the
+    # term's block as a raw bitmap — the caps surface the per-block decision
+    assert p.terms[4].codec == "dense_bitmap"
     assert p.terms[4].arena and not p.terms[4].fused
     dev = QueryEngine(idx).to_device(fused=True)
     pf = dev.plan(QueryBatch(QUERIES, mode="and"))
@@ -182,7 +185,7 @@ def test_mismatched_bp_frame_layout_falls_back_to_host():
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="bp128")
     t = 6                                        # df=1024 -> two bp128 blocks
     first, encg, enct = idx.terms[t].blocks[0]
-    gaps = codec.get("bp128").decode_np(encg)
+    gaps = codec.get(encg.codec).decode_np(encg)
     idx.terms[t].blocks[0] = (first, bp128_lib.encode(gaps, frame_quads=64), enct)
     arena = DeviceArena.from_index(idx, build_fused=False)
     assert not arena.covers((t, 0, 0))           # alien layout -> host oracle
@@ -224,11 +227,23 @@ def test_device_worklist_decodes_each_hot_block_once():
 
 
 def test_device_engine_eviction_pressure_stays_exact():
-    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="bp128")
+    # a sparse corpus (average docid gap far above the density cutoff) so
+    # every block is served through the decode path — dense-bitmap blocks
+    # never touch the block cache and would defuse the eviction pressure
+    # this test is about
+    rng = np.random.default_rng(77)
+    n = 60000
+    doclen = rng.integers(40, 300, n).astype(np.int64)
+    postings = {}
+    for t, df in enumerate([900, 1100, 1300, 700]):
+        ids = np.sort(rng.choice(n, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    idx = InvertedIndex.build(doclen, postings, codec="bp128")
     host = QueryEngine(idx)
     tiny = QueryEngine(idx, cache_blocks=2, cache_score_terms=1).to_device()
-    want = host.execute(QueryBatch(QUERIES, mode="and"))
-    got = tiny.execute(tiny.plan(QueryBatch(QUERIES, mode="and")))
+    queries = [[0, 1], [1, 2], [2, 3], [0, 3], [1, 3], [0, 2], [0, 1, 2]]
+    want = host.execute(QueryBatch(queries, mode="and"))
+    got = tiny.execute(tiny.plan(QueryBatch(queries, mode="and")))
     assert tiny.cache.evictions > 0
     for a, b in zip(want, got):
         np.testing.assert_array_equal(a, b)
@@ -293,7 +308,10 @@ def test_to_device_upgrades_unfused_arena_in_place():
     a2 = idx.to_device(build_fused=True)     # cached arena gains fused tiles
     assert a2 is a1 and a1._pk is not None
     eng = QueryEngine(idx).to_device(fused=True)
-    eng.execute(eng.plan(QueryBatch(QUERIES[:4], mode="and")))
+    # sparse terms only (df 12/63/64): dense-bitmap blocks are served
+    # word-parallel and would never reach the fused decode kernel
+    eng.execute(eng.plan(QueryBatch([[0, 1], [1, 2], [0, 2], [0, 1, 2]],
+                                    mode="and")))
     assert eng.arena.stats["fused_calls"] > 0
 
 

@@ -76,13 +76,21 @@ def test_batched_and_or_match_bruteforce(name):
 
 
 def test_short_lists_use_stream_vbyte():
+    from repro.core import dense_bitmap
     idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
     for t, (ids, _) in POSTINGS.items():
-        enc_codec = idx.terms[t].blocks[0][1].codec
-        if len(ids) < SHORT:
-            assert enc_codec == SHORT_CODEC, (t, len(ids))
-        else:
-            assert enc_codec == "group_simple", (t, len(ids))
+        # per-block, build picks: dense bitmap past the density cutoff, the
+        # short-list codec under the df cutoff, the requested codec otherwise
+        for bi, (_, encg, _) in enumerate(idx.terms[t].blocks):
+            if dense_bitmap.eligible(ids[bi * 512:(bi + 1) * 512]):
+                assert encg.codec == dense_bitmap.NAME, (t, bi, len(ids))
+            elif len(ids) < SHORT:
+                assert encg.codec == SHORT_CODEC, (t, bi, len(ids))
+            else:
+                assert encg.codec == "group_simple", (t, bi, len(ids))
+    # both the dense and the sparse arm are actually exercised
+    codecs = {encg.codec for tp in idx.terms.values() for _, encg, _ in tp.blocks}
+    assert dense_bitmap.NAME in codecs and "group_simple" in codecs
     # short-list-only AND goes entirely through the stream_vbyte path
     got = QueryEngine(idx).and_query([0, 1, 2])
     np.testing.assert_array_equal(got, brute_and(POSTINGS, [0, 1, 2]))

@@ -243,6 +243,170 @@ def test_topk_select_docid_tiebreak_and_partial_sort():
     assert topk_select(np.zeros(0, np.uint32), np.zeros(0), 3) == []
 
 
+# --------------------------------------------------------------------------- #
+# adaptive theta promotion + threshold/compact kernels
+# --------------------------------------------------------------------------- #
+
+
+def test_topk_threshold_k_exceeds_candidate_count():
+    """k larger than the number of nonzero sums must degenerate to 0 —
+    keep-everything, never a positive threshold that could drop real
+    candidates."""
+    import jax.numpy as jnp
+    acc = jnp.zeros((3, 128), jnp.uint32)
+    acc = acc.at[0, 3].set(9).at[0, 70].set(5)     # q0: two candidates
+    acc = acc.at[1, 0].set(2)                      # q1: one candidate
+    assert np.asarray(topk_kern.topk_threshold(acc, 5)).tolist() == [0, 0, 0]
+    assert np.asarray(topk_kern.pooled_threshold(acc, 5)).tolist() == [0, 0, 0]
+    # sanity: with k <= candidates the same kernels return the exact k-th
+    assert np.asarray(topk_kern.topk_threshold(acc, 2)).tolist() == [5, 0, 0]
+    assert np.asarray(topk_kern.topk_threshold(acc, 1)).tolist() == [9, 2, 0]
+
+
+def test_candidate_bitmap_all_pruned_worklist():
+    """A work-list whose every entry fails the promoted-theta upper-bound
+    test scatters nothing, and the final compact returns an all-zero
+    candidate bitmap (no candidates, no crash)."""
+    import jax.numpy as jnp
+    q, words, p, ow = 2, 4, 3, 8
+    acc = jnp.zeros((q, words * 32), jnp.uint32)
+    member = jnp.zeros((q, words), jnp.uint32)
+    ids = jnp.tile(jnp.arange(ow, dtype=jnp.uint32), (p, 1))
+    codes = jnp.ones((p, ow), jnp.uint32)
+    qslot = jnp.array([0, 1, 0], jnp.int32)
+    ns = jnp.full((p,), ow, jnp.int32)
+    theta = jnp.array([7, 7], jnp.uint32)
+    iq = jnp.full((q,), 1 << 16, jnp.uint32)       # identity scale
+    ub = jnp.array([7, 3, 0], jnp.int32)           # all <= scaled theta
+    acc, member = topk_kern.score_round(
+        acc, member, ids, qslot, codes, ns, member, ub, theta, iq,
+        gated=False)
+    assert not np.asarray(acc).any() and not np.asarray(member).any()
+    got = topk_kern.candidate_bitmap(acc, member, theta,
+                                     jnp.zeros((q,), jnp.int32), iq)
+    assert not np.asarray(got).any()
+
+
+def test_theta_promotion_monotone_and_never_over_promotes():
+    """The superset contract per round: the promoted theta is monotone
+    nondecreasing and NEVER exceeds the k-th largest sum of the final
+    accumulator — so a block dropped mid-flight (ub <= promoted theta) holds
+    only docs that end below the final threshold, outside the top-k."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(42)
+    q, width, k, rounds = 8, 256, 5, 6
+    acc = jnp.zeros((q, width), jnp.uint32)
+    theta = jnp.zeros((q,), jnp.uint32)
+    trail = []
+    for _ in range(rounds):
+        add = ((rng.random((q, width)) < 0.08)
+               * rng.integers(1, 200, (q, width)))
+        acc = acc + jnp.asarray(add.astype(np.uint32))
+        theta = jnp.maximum(theta, topk_kern.pooled_threshold(acc, k))
+        trail.append(np.asarray(theta).copy())
+    final_kth = np.sort(np.asarray(acc), axis=1)[:, -k]
+    for r, th in enumerate(trail):
+        assert np.all(th <= final_kth), r          # sound lower bound
+        if r:
+            assert np.all(th >= trail[r - 1]), r   # monotone promotion
+
+
+# --------------------------------------------------------------------------- #
+# density-adaptive bitmap blocks + adaptive theta: end-to-end parity
+# --------------------------------------------------------------------------- #
+
+
+def _dense_corpus():
+    """Clustered postings (avg gap ~2.5 << DENSE_GAP): the build stores most
+    blocks as raw 128-word bitmaps via the dense_bitmap capability."""
+    rng = np.random.default_rng(13)
+    n_docs = 6000
+    postings = {}
+    for t, df in enumerate([500, 512, 700, 1024, 300, 64]):
+        gaps = rng.integers(1, 5, df).astype(np.int64)
+        ids = (int(rng.integers(0, 900)) + np.cumsum(gaps)).astype(np.uint32)
+        assert int(ids[-1]) < n_docs
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    return rng.integers(60, 400, n_docs).astype(np.int64), postings
+
+
+DENSE_QUERIES = ([[0, 1], [2, 3], [0, 3, 4], [1, 2, 5], [4], [0, 1, 2, 3],
+                  [5, 3], [2, 4, 5]] * 2)
+
+
+@pytest.mark.parametrize("name", RANKED_CODECS)
+def test_dense_bitmap_corpus_ranked_parity(name):
+    """The density-adaptive representation serves the ranked modes
+    word-parallel with exact parity across all placements."""
+    from repro.core import dense_bitmap
+    doclen, postings = _dense_corpus()
+    idx = InvertedIndex.build(doclen, postings, codec=name)
+    assert any(encg.codec == dense_bitmap.NAME
+               for tp in idx.terms.values()
+               for _, encg, _ in tp.blocks), "corpus stores no dense blocks"
+    host = QueryEngine(idx)
+    for mode in ("or", "and_scored"):
+        want = host.execute(QueryBatch(DENSE_QUERIES, mode=mode, k=7))
+        for fused in (False, True):
+            eng = QueryEngine(idx).to_device(fused=fused)
+            got = eng.execute(eng.plan(QueryBatch(DENSE_QUERIES, mode=mode,
+                                                  k=7)))
+            assert want == got, (name, mode, fused)
+            assert eng.dev_stats["blocks_dense"] > 0, (name, mode, fused)
+        oracle_q = [q for q in DENSE_QUERIES]
+        for q, res in zip(oracle_q, host.execute(
+                QueryBatch(oracle_q, mode="or", k=7))):
+            oracle = brute_or_topk(doclen, postings, len(doclen), q, 7)
+            assert [(d, pytest.approx(s, rel=1e-12)) for d, s in oracle] == res
+
+
+def test_adaptive_theta_corpus_parity_and_pruning():
+    """The rare-clustered + common shape at a multi-round k=10: adaptive
+    promotion engages (several rounds, armed theta) and stays bitwise exact
+    while the static prune still drops blocks."""
+    queries = [[10, 7, 5], [10, 3, 8], [10, 7], [10, 1, 4, 6]] * 4
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    want = QueryEngine(idx).execute(QueryBatch(queries, mode="or", k=10))
+    for fused in (False, True):
+        eng = QueryEngine(idx).to_device(fused=fused)
+        got = eng.execute(eng.plan(QueryBatch(queries, mode="or", k=10)))
+        assert want == got, fused
+        assert eng.dev_stats["blocks_pruned"] > 0
+        assert eng.dev_stats["score_syncs"] == 0
+
+
+def test_tombstone_only_epoch_keeps_pruning_armed_and_exact():
+    """Deletes only raise idf, so the ranked path stays ARMED under a
+    tombstone-only epoch (idf-ratio deflated thresholds): blocks still
+    prune, and every placement matches a from-scratch rebuild of the live
+    corpus bitwise."""
+    idx = InvertedIndex.build(DOCLEN, POSTINGS, codec="group_simple")
+    rng = np.random.default_rng(31)
+    dead = set()
+    for d in rng.choice(N_DOCS, 30, replace=False):
+        idx.delete(int(d))
+        dead.add(int(d))
+    live = {}
+    for t, (ids, tfs) in POSTINGS.items():
+        keep = [j for j, d in enumerate(ids.tolist()) if d not in dead]
+        if keep:
+            live[t] = (ids[np.asarray(keep)], tfs[np.asarray(keep)])
+    rebuilt = InvertedIndex.build(DOCLEN, live, codec="group_simple")
+    queries = [[10, 7], [10, 3], [10, 7, 5], [0, 7], [3, 5, 8]] * 3
+    for mode in ("or", "and_scored"):
+        want = QueryEngine(rebuilt).execute(QueryBatch(queries, mode=mode,
+                                                       k=6))
+        assert QueryEngine(idx).execute(QueryBatch(queries, mode=mode,
+                                                   k=6)) == want, mode
+        for fused in (False, True):
+            eng = QueryEngine(idx).to_device(fused=fused)
+            got = eng.execute(eng.plan(QueryBatch(queries, mode=mode, k=6)))
+            assert want == got, (mode, fused)
+            assert eng.dev_stats["score_syncs"] == 0
+            if mode == "or":
+                assert eng.dev_stats["blocks_pruned"] > 0, fused
+
+
 def test_unpack_codes_pallas_matches_host():
     rng = np.random.default_rng(0)
     import jax.numpy as jnp

@@ -31,7 +31,13 @@ Checks, per registered codec:
      bitmap — the host and kernel packers bit-identical), and after a
      ``compact()`` merge the new generation's score block-max tables must
      match its stored impacts and a from-scratch rebuild of the same live
-     corpus.
+     corpus;
+  8. dense-bitmap block boundaries: any codec declaring the bitmap-block
+     layout (``ArenaLayout.bitmap_words`` / ``is_bitmap``) must round-trip
+     the density boundary cases — a block exactly at the ``DENSE_GAP``
+     cutoff (chosen as a bitmap), one gap past it (policy rejects it), a
+     singleton block, and a window-overflowing stream (raw fallback keeps
+     the codec total).
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -297,6 +303,52 @@ def lint_segments(errors: list) -> None:
             _fail(errors, f"segments: compacted term-max for {t} != rebuild")
 
 
+def lint_bitmap_blocks(errors: list) -> None:
+    """Density boundary cases for every bitmap-block codec (the word-parallel
+    dense representation): exactly-at-threshold and singleton blocks must be
+    *chosen* as bitmaps and round-trip exactly; one gap past the cutoff the
+    build policy must decline; a window-overflowing stream must fall back to
+    the raw format and still round-trip (the codec stays total)."""
+    from repro.core import dense_bitmap as dbm
+
+    def gaps_of(ids: np.ndarray) -> np.ndarray:
+        return np.diff(ids, prepend=np.int64(0)).astype(np.uint32)
+
+    n = 512
+    base = 4096                                   # 128-bit aligned window base
+    at = base + np.arange(n, dtype=np.int64) * dbm.DENSE_GAP
+    at[-1] = base + dbm.DENSE_GAP * n - 1         # span == DENSE_GAP * n
+    past = at.copy()
+    past[-1] += 1                                 # span == DENSE_GAP * n + 1
+    single = np.array([12345], np.int64)
+    overflow = np.array([0, dbm.WINDOW_BITS + 7], np.int64)   # no window fits
+    for name in codec.names():
+        spec = codec.get(name)
+        lay = spec.arena
+        if lay is None or not lay.bitmap_words:
+            continue
+        if not callable(lay.is_bitmap):
+            _fail(errors, f"{name}: declares bitmap_words="
+                          f"{lay.bitmap_words} without a callable is_bitmap")
+            continue
+        for tag, ids, want_eligible, want_bitmap in (
+                ("at-threshold", at, True, True),
+                ("past-threshold", past, False, None),
+                ("singleton", single, True, True),
+                ("window-overflow", overflow, False, False)):
+            if dbm.eligible(ids) != want_eligible:
+                _fail(errors, f"{name}: {tag} block eligibility "
+                              f"{dbm.eligible(ids)} != {want_eligible}")
+            enc = spec.encode(gaps_of(ids))
+            if want_bitmap is not None and lay.is_bitmap(enc) != want_bitmap:
+                _fail(errors, f"{name}: {tag} block stored as "
+                              f"{'bitmap' if lay.is_bitmap(enc) else 'raw'}; "
+                              f"expected {'bitmap' if want_bitmap else 'raw'}")
+            got = spec.decode_np(enc)
+            if not np.array_equal(got, gaps_of(ids)):
+                _fail(errors, f"{name}: {tag} block does not round-trip")
+
+
 def main() -> int:
     errors: list = []
     lint_protocol(errors)
@@ -305,6 +357,7 @@ def main() -> int:
     lint_parity_coverage(errors)
     lint_score_tables(errors)
     lint_segments(errors)
+    lint_bitmap_blocks(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
     print(f"registry lint: {len(codec.names())} codecs "
