@@ -5,10 +5,13 @@ stream lengths (slower); default sizes finish on a laptop-class CPU.
 
 ``--smoke`` is DETERMINISTIC on its inputs: every suite draws its corpus /
 stream / query workload from fixed RNG seeds (``--seed``, default 0) at
-pinned sizes (streams 2**14, 20 queries, the ``synth.DATASETS`` corpus
-shapes), so two smoke runs measure the identical workload and the JSON
-artifacts (``BENCH_query.json`` / ``BENCH_mutation.json`` — a baseline of
-the former is committed at the repo root) differ only in timings.
+pinned sizes (streams 2**14, 20 queries, 64 serving requests, the
+``synth.DATASETS`` corpus shapes), so two smoke runs measure the identical
+workload and the JSON artifacts (``BENCH_query.json`` / ``BENCH_mutation.json``
+/ ``BENCH_serving.json`` — baselines of the first and last are committed at
+the repo root) differ only in timings.  The serving smoke additionally
+asserts its CI guarantees: zero shed under the Poisson load and bitwise
+parity with the offline plan/execute oracle.
 """
 
 from __future__ import annotations
@@ -31,7 +34,7 @@ def main() -> None:
                     help="CI-sized quick pass (tiny streams, fast suites only)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: speed ratio gsc query index opt pipeline "
-                         "roofline kernels")
+                         "roofline kernels serving")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed for the query suite (fixed default "
                          "keeps --smoke deterministic)")
@@ -50,9 +53,12 @@ def main() -> None:
             n_tokens=max(n >> 1, 1 << 16)),
         "roofline": lambda: __import__("benchmarks.bench_roofline", fromlist=["run"]).run(),
         "kernels": lambda: __import__("benchmarks.bench_roofline", fromlist=["run_kernels"]).run_kernels(),
+        "serving": lambda: __import__("benchmarks.bench_serving", fromlist=["run"]).run(
+            n_requests=512 if args.full else (64 if args.smoke else 192),
+            seed=args.seed, smoke=args.smoke),
     }
-    todo = args.only or (["speed", "query", "index", "kernels"] if args.smoke
-                         else list(suites))
+    todo = args.only or (["speed", "query", "index", "kernels", "serving"]
+                         if args.smoke else list(suites))
     print("name,us_per_call,derived")
     failed = []
     for key in todo:

@@ -10,8 +10,11 @@ Layers (bottom up):
     over single-query plans).
   * ``engine`` — the batched query engine: ``engine.plan(batch)`` resolves a
     ``QueryBatch`` into a typed ``ExecutionPlan`` — placement (host / device
-    / fused, with batches of <= ``HOST_BATCH_MAX`` queries auto-placed on
-    the host, recorded in the plan's ``note``) plus every referenced term's
+    / fused, with small batches auto-placed on the host per the measured
+    ``CrossoverTable`` from the committed ``BENCH_query.json``, falling back
+    to the static ``HOST_BATCH_MAX`` rule when the baseline is absent or
+    shows no true host->device crossing; the deciding source is recorded in
+    the plan's ``note``) plus every referenced term's
     codec capabilities, read once from the registry — and
     ``engine.execute(plan)`` runs it: AND queries fuse skip-table block
     pruning with the vectorized intersection kernels
@@ -39,6 +42,10 @@ Layers (bottom up):
     (a versioned dead-docid set with frozen memoized views) sit beside the
     immutable ``Generation``; ``InvertedIndex`` composes the three into a
     mutable handle that serves bit-identically to a from-scratch rebuild.
+  * ``serve`` — latency-governed online serving on top of ``engine``: an
+    async admission queue + dynamic batcher turning a request *stream* into
+    the ``QueryBatch``-shaped work everything below is built for (see the
+    serving walkthrough further down).
 
 Streaming mutation (insert -> tombstone -> compact -> generation swap):
 ``InvertedIndex`` wraps one immutable ``Generation`` (gid-stamped: blocks,
@@ -138,6 +145,38 @@ declares ``bitmap_words`` / ``is_bitmap`` alongside the ordinary two-column
 Mixed dense/sparse lists therefore fall out of the registry machinery with
 zero engine special cases, and a new density policy is one codec swap.
 
+Online serving (admission -> batch -> plan -> execute, SLO semantics):
+``serve.IndexServer`` fronts one ``QueryEngine`` with an async admission
+queue and a dynamic batcher.  A ``Request(terms, mode, k, tenant,
+deadline_ms)`` is admitted into its tenant's bounded queue (each tenant's
+share of ``queue_cap`` is proportional to its configured weight; over-share
+-> explicit ``Rejected("queue_full")``, already-spent deadline ->
+``Rejected("expired")`` — backpressure is always an explicit result, never
+a silent stall).  The batcher seeds each batch with the earliest-deadline
+pending request (EDF) and fills it by smooth weighted round-robin with
+*compatible* requests only — same ``(mode, k)``; mixed modes never co-batch
+— closing on size (``max_batch``) OR time (earliest member deadline minus
+``slack_ms``, capped by the seed's ``max_wait_ms`` so a lone request on an
+idle queue still flushes promptly), whichever hits first.  Members whose
+deadline passed while queued are shed at close (``Rejected("deadline")``);
+the survivors become ONE ``QueryBatch`` through the ordinary
+``engine.plan()/execute()`` discipline, so served results are bitwise the
+offline path's and the plan's pinned epoch makes a racing ``compact()``
+invisible.  A request that starts in time but finishes late is served, not
+shed — it counts against ``on_time_frac`` / ``goodput_qps`` instead of
+``shed_rate``.  ``start()`` warms the hottest terms' decoded-block + score
+caches and primes the jit buckets before the first real request.  Every
+request leaves a five-stamp ``TraceRecord`` (enqueue <= close <= plan <=
+execute <= done — monotonicity is registry-linted) and every batch a
+replayable ``BatchRecord`` in ``ServerStats``; ``snapshot()`` derives
+p50/p99/p999 latency, goodput, shed rate, and the per-placement batch-size
+histogram.  ``benchmarks/bench_serving.py`` drives seeded Poisson and
+bursty (Gamma) open-loop streams through all of this into
+``BENCH_serving.json`` (committed baseline at the repo root; the smoke run
+asserts zero shed under Poisson and bitwise oracle parity), and
+``python -m repro.launch.serve --index --smoke`` is the end-to-end entry
+point.
+
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a
 ``repro.core.codec.Codec`` in ``repro/core/codec.py``.  Capabilities are
@@ -183,4 +222,4 @@ Migration note (deprecated v1 surface, kept as delegating shims):
     read-only aliases).
 """
 
-from . import device, engine, invindex, query, scores  # noqa: F401
+from . import device, engine, invindex, query, scores, serve  # noqa: F401

@@ -78,6 +78,8 @@ from __future__ import annotations
 
 import dataclasses
 import difflib
+import json
+import os
 import warnings
 from collections import OrderedDict
 from typing import Mapping, Optional
@@ -91,11 +93,97 @@ from .device import _bucket     # one shared jit-bucket policy with the arena
 from .invindex import InvertedIndex
 from .scores import B, K1, bm25_scores, topk_select  # noqa: F401  (B/K1 re-export)
 
-# plan-time auto-placement: below this batch size the host numpy path beats
-# the device round machinery (BENCH_query.json, batch=1: 14.0k host vs 3.3k
-# device qps on the CI backend), so tiny batches are planned onto the host
-# even when arenas exist
+# plan-time auto-placement, static fallback: below this batch size the host
+# numpy path beats the device round machinery on every backend measured so
+# far, so tiny batches are planned onto the host even when arenas exist.
+# When a committed BENCH_query.json baseline is present, ``plan()`` instead
+# derives a :class:`CrossoverTable` from its measured host/device qps curves
+# and only falls back to this constant when the curves show no true
+# host->device crossing (see ``CrossoverTable.from_bench``).
 HOST_BATCH_MAX = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossoverTable:
+    """Host-vs-device placement crossover derived from a measured
+    ``BENCH_query.json`` baseline.
+
+    ``host_batch_max`` is the demotion threshold ``plan()`` uses: batches of
+    at most this many queries are auto-placed on the host.  It is derived
+    conservatively — the largest measured batch size where the host wins
+    (host_qps >= device_qps) AND the device wins at *every* larger measured
+    size.  That second clause matters: a backend where the host wins at the
+    largest measured size (true of CPU-emulated device backends) has no
+    real crossing, and extrapolating one would demote production-sized
+    batches off the arenas.  In that case ``host_batch_max`` is None and
+    ``plan()`` falls back to the static ``HOST_BATCH_MAX`` rule.  A backend
+    where the device wins everywhere yields 0 (never demote)."""
+    host_batch_max: Optional[int]
+    sizes: tuple = ()
+    source: str = "BENCH_query.json"
+
+    @classmethod
+    def from_bench(cls, report: Mapping, source: str = "BENCH_query.json"
+                   ) -> "CrossoverTable":
+        host = {int(b): float(q)
+                for b, q in (report.get("host_qps") or {}).items()}
+        dev = {int(b): float(q)
+               for b, q in (report.get("device_qps") or {}).items()}
+        sizes = sorted(set(host) & set(dev))
+        if not sizes:
+            return cls(None, (), source)
+        if all(dev[b] > host[b] for b in sizes):
+            return cls(0, tuple(sizes), source)
+        cut = None
+        for b in sizes:
+            larger = [s for s in sizes if s > b]
+            if (host[b] >= dev[b] and larger
+                    and all(dev[s] > host[s] for s in larger)):
+                cut = b
+        return cls(cut, tuple(sizes), source)
+
+
+def _repo_root() -> str:
+    here = os.path.abspath(__file__)            # src/repro/index/engine.py
+    for _ in range(4):
+        here = os.path.dirname(here)
+    return here
+
+
+def _load_crossover() -> Optional[CrossoverTable]:
+    """The crossover table from the committed benchmark baseline
+    (``BENCH_QUERY_JSON`` env override, else ``BENCH_query.json`` at the
+    repo root), or None when the file is absent/unreadable — ``plan()``
+    then applies the static ``HOST_BATCH_MAX`` rule."""
+    path = (os.environ.get("BENCH_QUERY_JSON")
+            or os.path.join(_repo_root(), "BENCH_query.json"))
+    try:
+        with open(path) as f:
+            report = json.load(f)
+        return CrossoverTable.from_bench(report, source=os.path.basename(path))
+    except (OSError, ValueError, TypeError, AttributeError):
+        return None
+
+
+_CROSSOVER_UNSET = object()
+_crossover = _CROSSOVER_UNSET
+
+
+def get_crossover() -> Optional[CrossoverTable]:
+    """The cached placement crossover table (loaded once per process)."""
+    global _crossover
+    if _crossover is _CROSSOVER_UNSET:
+        _crossover = _load_crossover()
+    return _crossover
+
+
+def set_crossover(table=_CROSSOVER_UNSET) -> None:
+    """Override the cached crossover table.  Pass a :class:`CrossoverTable`
+    to force one, ``None`` to simulate an absent baseline (static-rule
+    fallback), or no argument to drop the override and reload from disk on
+    next use.  Test hook — production code never calls this."""
+    global _crossover
+    _crossover = table
 
 _EMPTY_U32 = np.zeros(0, np.uint32)
 _EMPTY_U32.setflags(write=False)
@@ -1403,12 +1491,21 @@ class QueryEngine:
 
     # ---- planned execution -------------------------------------------------- #
 
-    def plan(self, batch: QueryBatch) -> ExecutionPlan:
+    def plan(self, batch: QueryBatch,
+             placement: Optional[str] = None) -> ExecutionPlan:
         """Resolve a batch into a typed :class:`ExecutionPlan`: placement
         (host / device / fused, following the engine's current arena state)
         plus every referenced term's codec capabilities, read once from the
         codec registry's declarations.  ``execute(plan)`` then runs with no
         per-codec or per-flag branching.
+
+        Auto-placement (``placement=None``) demotes small batches to the
+        host using the measured :class:`CrossoverTable` from the committed
+        ``BENCH_query.json`` when one exists, else the static
+        ``HOST_BATCH_MAX`` rule; ``plan.note`` records which source decided.
+        An explicit ``placement`` skips the demotion entirely (the serving
+        path and benchmarks use this to pin a placement per run) and is
+        validated against the engine's arena state up front.
 
         The plan also pins the current mutation epoch (:class:`_ExecCtx`):
         its generation, a frozen delta snapshot, and the tombstone set.
@@ -1416,14 +1513,41 @@ class QueryEngine:
         the SAME results it would have returned at plan time."""
         _check_mode(batch.mode)
         ctx = self._cur()
-        placement = ("fused" if self.arena is not None and self._fused else
-                     "device" if self.arena is not None else "host")
         note = ""
-        if placement != "host" and len(batch.queries) <= HOST_BATCH_MAX:
-            note = (f"auto-placed host: batch={len(batch.queries)} <= "
-                    f"HOST_BATCH_MAX={HOST_BATCH_MAX} (tiny batches win on "
-                    f"the host path)")
-            placement = "host"
+        if placement is not None:
+            if placement not in PLACEMENTS:
+                raise ValueError(f"unknown placement {placement!r}; "
+                                 f"placements: {PLACEMENTS}")
+            if placement != "host" and self.arena is None:
+                raise ValueError(
+                    f"explicit placement {placement!r} needs device arenas; "
+                    "call to_device() on this engine first")
+            if placement == "fused" and not self._fused:
+                raise ValueError(
+                    "explicit placement 'fused' needs fused tile arenas; "
+                    "call to_device(fused=True) on this engine first")
+            note = f"placement {placement!r} pinned by caller"
+        else:
+            placement = ("fused" if self.arena is not None and self._fused
+                         else "device" if self.arena is not None else "host")
+            if placement != "host":
+                n = len(batch.queries)
+                xo = get_crossover()
+                if xo is not None and xo.host_batch_max is not None:
+                    if n <= xo.host_batch_max:
+                        note = (f"auto-placed host: batch={n} <= "
+                                f"host_batch_max={xo.host_batch_max} "
+                                f"(measured crossover, {xo.source}, "
+                                f"sizes={list(xo.sizes)})")
+                        placement = "host"
+                elif n <= HOST_BATCH_MAX:
+                    reason = ("no BENCH_query.json baseline" if xo is None
+                              else f"{xo.source}: no host->device crossover "
+                                   f"measured")
+                    note = (f"auto-placed host: batch={n} <= "
+                            f"HOST_BATCH_MAX={HOST_BATCH_MAX} "
+                            f"(static rule; {reason})")
+                    placement = "host"
         if ctx.mutated:
             mnote = (f"pinned epoch {ctx.skey}: {len(ctx.dead)} tombstone(s), "
                      f"{len(ctx.delta)} delta doc(s)")

@@ -1,8 +1,12 @@
-"""Serving launcher: prefill + batched decode (LM) or batched scoring /
-retrieval (recsys) under the serving sharding plan.
+"""Serving launcher: prefill + batched decode (LM), batched scoring /
+retrieval (recsys) under the serving sharding plan, or the latency-governed
+index serving loop (``--index``: async admission + dynamic batching over the
+``QueryEngine``, see ``repro.index.serve``).
 
   python -m repro.launch.serve --arch smollm-135m --smoke --tokens 8
   python -m repro.launch.serve --arch din --shape serve_p99 --smoke
+  python -m repro.launch.serve --index --smoke
+  python -m repro.launch.serve --index --rate 300 --requests 512 --placement device
 """
 
 from __future__ import annotations
@@ -20,14 +24,82 @@ from repro.distributed import sharding as shlib
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 
 
+def serve_index(args) -> None:
+    """Index retrieval serving: build a seeded corpus, start the
+    :class:`~repro.index.serve.IndexServer`, drive an open-loop Poisson
+    stream through it, and print the SLO snapshot.  ``--smoke`` shrinks the
+    stream to CI size and asserts nothing was shed."""
+    from repro.data import synth
+    from repro.index.invindex import InvertedIndex
+    from repro.index.engine import QueryEngine
+    from repro.index.serve import (Rejected, Request, ServeConfig,
+                                   poisson_offsets, serve_stream)
+
+    n = 32 if args.smoke else args.requests
+    doclen, postings = synth.make_corpus(args.dataset, args.seed)
+    idx = InvertedIndex.build(doclen, postings)
+    idx.to_device(build_fused=True)
+    engine = QueryEngine(idx).to_device(fused=True)
+    # head-term conjunctions, same shape as benchmarks.bench_query's workload
+    rng = np.random.default_rng(3 + args.seed)
+    terms = sorted(postings)
+    queries = [rng.choice(terms[:120], size=rng.integers(2, 4),
+                          replace=False).tolist() for _ in range(n)]
+    reqs = [Request(list(q), mode="and", k=10, deadline_ms=args.deadline_ms)
+            for q in queries]
+    offsets = poisson_offsets(n, args.rate, seed=41 + args.seed)
+    cfg = ServeConfig(max_batch=16, max_wait_ms=4.0, slack_ms=2.0,
+                      queue_cap=max(256, 4 * n),
+                      default_deadline_ms=args.deadline_ms,
+                      placement=args.placement, warm_terms=32,
+                      # prime the jit buckets with the (seeded, known)
+                      # workload so the stream measures serving, not
+                      # first-seen compile stalls
+                      warm_queries=queries)
+    results, stats = serve_stream(engine, reqs, offsets, cfg)
+    snap = stats.snapshot()
+    lat = snap["latency_ms"]
+    print(f"served {snap['served']}/{snap['submitted']} "
+          f"(shed_rate={snap['shed_rate']:.3f}) at {args.rate:.0f} qps "
+          f"poisson on placement={args.placement or 'auto'}")
+    print(f"latency ms: p50={lat.get('p50', 0):.2f} p99={lat.get('p99', 0):.2f} "
+          f"p999={lat.get('p999', 0):.2f}  goodput={snap['goodput_qps']:.1f} qps  "
+          f"mean_batch={snap['mean_batch']:.1f}  warmup={snap['warmup_s']:.2f}s")
+    if args.smoke:
+        shed = [r for r in results if isinstance(r, Rejected)]
+        assert not shed, f"smoke stream shed {len(shed)} requests: {shed[:3]}"
+        print("index serve smoke ok")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(configs.ARCHS))
+    ap.add_argument("--arch", default=None, choices=sorted(configs.ARCHS))
+    ap.add_argument("--index", action="store_true",
+                    help="serve the inverted index (async admission + "
+                         "dynamic batching) instead of a model arch")
     ap.add_argument("--shape", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dataset", default="gov2")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="index mode: mean Poisson arrival rate (qps)")
+    ap.add_argument("--deadline-ms", type=float, default=2500.0,
+                    help="index mode: per-request SLO budget (generous "
+                         "default absorbs jit compile stalls on CPU)")
+    ap.add_argument("--placement", default=None,
+                    choices=["host", "device", "fused"],
+                    help="index mode: pin every batch's placement "
+                         "(default: engine auto-placement)")
     args = ap.parse_args()
+
+    if args.index:
+        serve_index(args)
+        return
+    if args.arch is None:
+        ap.error("either --arch or --index is required")
 
     spec = configs.get(args.arch)
     serve_cells = [c for c in spec.shapes.values()

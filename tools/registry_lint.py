@@ -37,7 +37,12 @@ Checks, per registered codec:
      the density boundary cases — a block exactly at the ``DENSE_GAP``
      cutoff (chosen as a bitmap), one gap past it (policy rejects it), a
      singleton block, and a window-overflowing stream (raw fallback keeps
-     the codec total).
+     the codec total);
+  9. serving-trace discipline: every ``ServerStats`` trace record from a
+     lint-sized serve stream carries monotone non-decreasing stage
+     timestamps (enqueue <= batch-close <= plan <= execute <= done), served
+     traces carry all five stamps plus batch metadata, and batch records'
+     own stamps are ordered.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -349,6 +354,58 @@ def lint_bitmap_blocks(errors: list) -> None:
                 _fail(errors, f"{name}: {tag} block does not round-trip")
 
 
+def lint_serving_traces(errors: list) -> None:
+    """Serving-trace discipline on a lint-sized stream: drive a short burst
+    through the :class:`~repro.index.serve.IndexServer` and check every
+    :class:`TraceRecord`'s stage timestamps are monotone non-decreasing
+    (enqueue <= close <= plan <= execute <= done), every served trace
+    carries all five stamps plus its batch metadata, and every
+    :class:`BatchRecord`'s own stamps are ordered.  A regression here means
+    the latency percentiles and the per-stage breakdowns in
+    ``BENCH_serving.json`` are built on garbage clocks."""
+    from repro.index.invindex import InvertedIndex
+    from repro.index.engine import QueryEngine
+    from repro.index.serve import Request, ServeConfig, serve_stream, STAGES
+
+    rng = np.random.default_rng(29)
+    n_docs = 4000
+    postings = {}
+    for t, df in enumerate([40, 150, 500, 800]):
+        ids = np.sort(rng.choice(n_docs, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    doclen = rng.integers(30, 300, n_docs).astype(np.int64)
+    idx = InvertedIndex.build(doclen, postings)
+    engine = QueryEngine(idx)
+    reqs = ([Request([0, 2], deadline_ms=500) for _ in range(12)]
+            + [Request([1, 3], deadline_ms=0)])      # one expired-at-enqueue
+    offsets = np.arange(len(reqs)) * 1e-4
+    _, stats = serve_stream(engine, reqs, offsets,
+                            ServeConfig(max_batch=4, max_wait_ms=1.0,
+                                        warm_terms=4))
+    if not stats.traces:
+        _fail(errors, "serving: lint stream produced no trace records")
+    n_stamps = len(STAGES)
+    for tr in stats.traces:
+        s = tr.stages()
+        if any(b < a for a, b in zip(s, s[1:])):
+            _fail(errors, f"serving: trace rid={tr.rid} ({tr.outcome}) has "
+                          f"non-monotone stage timestamps {s}")
+        if tr.outcome == "served":
+            if len(s) != n_stamps:
+                _fail(errors, f"serving: served trace rid={tr.rid} carries "
+                              f"{len(s)}/{n_stamps} stage stamps")
+            if tr.batch_size < 1 or tr.placement not in ("host", "device",
+                                                         "fused"):
+                _fail(errors, f"serving: served trace rid={tr.rid} missing "
+                              f"batch metadata (size={tr.batch_size}, "
+                              f"placement={tr.placement!r})")
+    for b in stats.batches:
+        s = (b.t_close, b.t_plan, b.t_execute, b.t_done)
+        if any(y < x for x, y in zip(s, s[1:])):
+            _fail(errors, f"serving: batch {b.batch_id} has non-monotone "
+                          f"stage timestamps {s}")
+
+
 def main() -> int:
     errors: list = []
     lint_protocol(errors)
@@ -358,6 +415,7 @@ def main() -> int:
     lint_score_tables(errors)
     lint_segments(errors)
     lint_bitmap_blocks(errors)
+    lint_serving_traces(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
     print(f"registry lint: {len(codec.names())} codecs "
