@@ -11,7 +11,14 @@ block-max top-k: qps per placement, ``blocks_pruned`` / ``blocks_scored``,
 and per-round host syncs, which must be zero on the resident ranked path) —
 and writes the whole thing to ``BENCH_query.json`` (override the path with
 the ``BENCH_QUERY_JSON`` env var) so CI can track the perf trajectory as an
-artifact.  On the CPU/interpret CI backend the device path's wall-clock is
+artifact.  Two more report sections feed the serving stack: ``mode_qps``
+(host-vs-device qps per batch size, per query MODE, with the placement
+pinned — ``CrossoverTable.from_bench`` derives one demotion cell per mode
+from these, so ranked modes demote independently of plain AND) and
+``sharded`` (doc-range sharded serving scaling curves over ``--shards``
+counts: qps per mode, plus the collective accounting — merge syncs and
+collective bytes per ranked batch, and the cross-shard round syncs, which
+must be ZERO: doc-wise partitioning keeps every round shard-local).  On the CPU/interpret CI backend the device path's wall-clock is
 not the headline (jitted gathers vs raw numpy); the tracked guarantee there
 is ``decodes_per_hot_block == 1.0``: each hot (term, block) decodes at most
 once per batch, in O(rounds) device calls instead of O(blocks) Python
@@ -91,7 +98,8 @@ def make_ranked_queries(postings: dict, n_queries: int, seed: int = 7) -> list:
             for _ in range(n_queries)]
 
 
-def run(n_queries: int = 100, dataset: str = "gov2", seed: int = 0) -> None:
+def run(n_queries: int = 100, dataset: str = "gov2", seed: int = 0,
+        shard_counts: tuple = (1, 2, 4)) -> None:
     doclen, postings = synth.make_corpus(dataset, seed)
     queries = make_queries(postings, n_queries, seed=3 + seed)
     for name in CODECS:
@@ -112,13 +120,14 @@ def run(n_queries: int = 100, dataset: str = "gov2", seed: int = 0) -> None:
     # batched mode needs enough queries sharing terms to expose cache reuse —
     # keep the canonical 256 except under CI smoke sizing (n_queries <= 20)
     run_batched(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 256,
-                seed=seed)
+                seed=seed, shard_counts=shard_counts)
     run_mutation(dataset=dataset, n_queries=n_queries if n_queries <= 20 else 128,
                  seed=seed)
 
 
 def run_batched(dataset: str = "gov2", codec: str = "group_simple",
-                n_queries: int = 256, seed: int = 0) -> None:
+                n_queries: int = 256, seed: int = 0,
+                shard_counts: tuple = (1, 2, 4)) -> None:
     """Batched engine (host + device paths) vs the seed scalar loop."""
     doclen, postings = synth.make_corpus(dataset, seed)
     queries = make_queries(postings, n_queries, seed=3 + seed)
@@ -236,6 +245,82 @@ def run_batched(dataset: str = "gov2", codec: str = "group_simple",
         emit(f"query/{dataset}/{codec}/{mode}_blockmax", 0.0,
              f"{entry['blocks_pruned']}pruned,{entry['blocks_scored']}scored,"
              f"{entry['host_syncs_per_query']:.3f}syncs_per_query")
+
+    # per-mode placement crossover curves, placement PINNED (the auto-placed
+    # curves above fold the planner's own demotion into the measurement):
+    # CrossoverTable.from_bench derives one demotion cell per mode from
+    # "mode_qps", so ranked modes — which amortize score uploads and the
+    # final-merge sync over the batch — demote independently of plain AND
+    report["mode_qps"] = {"and": {"host": dict(report["host_qps"]),
+                                  "device": dict(report["device_qps"])}}
+    for mode in ("or", "and_scored"):
+        curves = {"host": {}, "device": {}}
+        for bs in BATCH_SIZES:
+            rbatches = [ranked_queries[i:i + bs]
+                        for i in range(0, len(ranked_queries), bs)]
+
+            def run_mode(device: bool):
+                eng = QueryEngine(idx)
+                if device:
+                    eng.to_device()
+                for b in rbatches:
+                    eng.execute(eng.plan(
+                        QueryBatch(b, mode=mode, k=10),
+                        placement="device" if device else "host"))
+
+            t = timeit(lambda: run_mode(False), repeats=3, warmup=1)
+            curves["host"][bs] = n_queries / t
+            t = timeit(lambda: run_mode(True), repeats=3, warmup=1)
+            curves["device"][bs] = n_queries / t
+            emit(f"query/{dataset}/{codec}/{mode}_crossover_{bs}", 0.0,
+                 f"host={curves['host'][bs]:.1f}qps,"
+                 f"device={curves['device'][bs]:.1f}qps")
+        report["mode_qps"][mode] = curves
+
+    # doc-range sharded serving: scaling curves over shard counts.  The
+    # per-generation shard cache means the slice-and-re-encode build cost is
+    # paid once per count (in the warmup), so the timers measure serving.
+    # Tracked contracts: ONE top-k merge collective per ranked batch, and
+    # ZERO cross-shard round syncs (candidates and score accumulators never
+    # leave their shard — doc-wise partitioning, not term-wise).
+    report["sharded"] = {}
+    for s in shard_counts:
+        entry = {"qps": {}}
+        for mode in ("and", "or", "and_scored"):
+            qs = queries if mode == "and" else ranked_queries
+
+            def run_shard_engine():
+                eng = QueryEngine(idx).to_device(shards=s)
+                for i in range(0, len(qs), 64):
+                    eng.execute(eng.plan(
+                        QueryBatch(qs[i:i + 64], mode=mode, k=10),
+                        placement="device"))
+                return eng
+
+            t = timeit(run_shard_engine, repeats=3, warmup=1)
+            entry["qps"][mode] = n_queries / t
+            emit(f"query/{dataset}/{codec}/sharded{s}_{mode}", t * 1e6,
+                 f"{n_queries / t:.1f}qps")
+        eng = QueryEngine(idx).to_device(shards=s)
+        n_batches = -(-len(ranked_queries) // 64)
+        for i in range(0, len(ranked_queries), 64):
+            eng.execute(eng.plan(
+                QueryBatch(ranked_queries[i:i + 64], mode="or", k=10),
+                placement="device"))
+        spec, engs, _ = eng._shard_engines(eng._ctx_now())
+        entry["bounds"] = list(spec.bounds)
+        entry["merge_syncs_per_batch"] = \
+            eng.dev_stats["merge_syncs"] / n_batches
+        entry["collective_bytes_per_batch"] = \
+            eng.dev_stats["collective_bytes"] / n_batches
+        entry["cross_shard_round_syncs"] = sum(
+            e.dev_stats["cand_syncs"] + e.dev_stats["score_syncs"]
+            for e in engs if e is not None)
+        report["sharded"][s] = entry
+        emit(f"query/{dataset}/{codec}/sharded{s}_collectives", 0.0,
+             f"{entry['merge_syncs_per_batch']:.1f}merges_per_batch,"
+             f"{entry['collective_bytes_per_batch']:.0f}B,"
+             f"{entry['cross_shard_round_syncs']}cross_shard_syncs")
 
     path = os.environ.get("BENCH_QUERY_JSON", "BENCH_query.json")
     with open(path, "w") as f:
@@ -359,8 +444,13 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed (corpus + query sets); fixed default "
                          "keeps runs deterministic")
+    ap.add_argument("--shards", type=str, default="1,2,4",
+                    help="comma-separated shard counts for the sharded "
+                         "serving scaling curves (BENCH_query.json)")
     args = ap.parse_args()
+    shard_counts = tuple(int(x) for x in args.shards.split(",") if x)
     if args.mutate:
         run_mutation(n_queries=args.n_queries or 128, seed=args.seed)
     else:
-        run(n_queries=args.n_queries or 100, seed=args.seed)
+        run(n_queries=args.n_queries or 100, seed=args.seed,
+            shard_counts=shard_counts)

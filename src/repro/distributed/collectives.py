@@ -121,6 +121,53 @@ def compressed_allreduce_flat(x: jnp.ndarray, axis_names, bits: int = 8):
     return out[:n], resid[:n]
 
 
+# --------------------------------------------------------------------------- #
+# sharded-serving top-k merge (the serving path's ONE collective per batch)
+# --------------------------------------------------------------------------- #
+
+
+def merge_topk_stats(theta_parts, count_parts, mesh=None,
+                     axis_name: str = "shards"):
+    """Merge per-shard (k-th sum, candidate-count) statistics into the global
+    ranked threshold — doc-range sharded serving's single collective.
+
+    theta_parts / count_parts: per-shard device arrays, each (nqp,).  Returns
+    ``(theta_merged (nqp,) int64 np, counts (S, nqp) np, wire_bytes)`` where
+    theta_merged[q] = max over shards (a sound lower bound on the global
+    k-th sum; see ``kernels/topk.topk_stats``).
+
+    When ``mesh`` spans exactly one device per shard the merge runs as one
+    ``all_gather`` + max under ``shard_map`` over ``axis_name``; otherwise
+    (logical shards on one device — the CPU CI case) the per-shard vectors
+    are stacked host-side, which moves the same ``wire_bytes``.
+    """
+    import numpy as np
+    s = len(theta_parts)
+    nqp = int(theta_parts[0].shape[0])
+    wire_bytes = s * nqp * 4 * 2                 # u32 theta + i32 count
+    if mesh is not None and mesh.devices.size == s and s > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        t = jax.device_put(jnp.stack([jnp.asarray(p) for p in theta_parts]),
+                           NamedSharding(mesh, P(axis_name)))
+        c = jax.device_put(jnp.stack([jnp.asarray(p) for p in count_parts]),
+                           NamedSharding(mesh, P(axis_name)))
+
+        def gather_max(ts, cs):
+            g = jax.lax.all_gather(ts, axis_name, tiled=True)
+            gc = jax.lax.all_gather(cs, axis_name, tiled=True)
+            return g.max(axis=0), gc
+
+        theta, counts = jax.jit(shard_map(
+            gather_max, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(), P()), check_rep=False))(t, c)
+        return (np.asarray(theta).astype(np.int64),
+                np.asarray(counts), wire_bytes)
+    thetas = np.stack([np.asarray(p) for p in theta_parts])
+    counts = np.stack([np.asarray(p) for p in count_parts])
+    return thetas.max(axis=0).astype(np.int64), counts, wire_bytes
+
+
 def compressed_psum_mean(tree, axis_names, bits: int = 8, error_feedback=None):
     """Mean-all-reduce a pytree with compression + error feedback.
 

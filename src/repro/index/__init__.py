@@ -42,6 +42,12 @@ Layers (bottom up):
     (a versioned dead-docid set with frozen memoized views) sit beside the
     immutable ``Generation``; ``InvertedIndex`` composes the three into a
     mutable handle that serves bit-identically to a from-scratch rebuild.
+  * ``shards`` — doc-range sharding: one generation split at contiguous
+    docid boundaries into per-shard self-contained generations whose BM25 /
+    quantizer statistics are pinned to the parent's, so the sharded serving
+    path (``engine.to_device(shards=N)`` / ``mesh=``) runs every round
+    shard-local and merges ranked top-k with one collective (see the sharded
+    serving walkthrough further down).
   * ``serve`` — latency-governed online serving on top of ``engine``: an
     async admission queue + dynamic batcher turning a request *stream* into
     the ``QueryBatch``-shaped work everything below is built for (see the
@@ -177,6 +183,41 @@ asserts zero shed under Poisson and bitwise oracle parity), and
 ``python -m repro.launch.serve --index --smoke`` is the end-to-end entry
 point.
 
+Sharded multi-device serving (doc-range partitioning, margin-preserving
+merge): ``engine.to_device(shards=N)`` (or ``mesh=launch.mesh.serving_mesh(N)``
+to pin one shard per device, ``bounds=(0, ..., n_docs)`` for explicit —
+possibly uneven or empty — splits) partitions the generation **doc-wise by
+contiguous docid ranges** (``index/shards.py``; ``ShardSpec.derive`` balances
+per-tile posting mass read off the skip tables alone).  Doc-wise is the
+partitioning under which every per-round kernel is already shard-local: a
+doc's postings for *every* term live in exactly one shard, so AND candidate
+bitmaps and ranked score accumulators never reference another shard's docids
+— rounds run with ZERO inter-device traffic, and each shard is an ordinary
+single-device ``QueryEngine`` over its slice (own arenas, skip / block-max /
+stripe tables, caches).  The one subtlety is statistics: each shard
+generation is rebuilt over its local docid space but with the parent's
+(df, n_docs, avdl, global max impact) pinned (``shard_generation``'s fixup;
+registry-linted), so per-(term, doc) quantized codes are bitwise the
+unsharded arena's and per-shard quantized sums are globally comparable.
+Ranked merge: every shard reports its local k-th quantized sum (ONE
+all-gather of (theta, count) pairs per batch — under a mesh via
+``jax.shard_map`` + ``distributed.collectives.merge_topk_stats``, else a
+host stack); the merged threshold ``max_s(theta_s)`` lower-bounds the global
+k-th sum, so applying the ordinary quantization-margin contract
+*shard-locally* at that threshold keeps the union of per-shard candidate
+bitmaps a guaranteed superset of the float top-k, and the shared block-lazy
+float rescore restores bit-identity with the unsharded host oracle (every
+mode, every placement — ``tests/test_sharded.py``).  Adaptive theta
+promotion starts from the max pooled theta0 across shards (the argmax shard
+really holds k docs reaching it); tombstone gates are sliced at shard
+boundaries (``intersect_rounds.pack_live_words_range``); mutation epochs pin
+per-shard generation sets atomically — the shard set is cached ON the
+generation, so a racing ``compact()`` builds a fresh set for gid+1 while
+in-flight plans keep serving the old one; ``plan.note`` records the shard
+topology.  ``BENCH_query.json`` tracks the scaling curves per shard count
+(qps per mode, merge syncs and collective bytes per ranked batch, and
+cross-shard round syncs — ZERO by construction).
+
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a
 ``repro.core.codec.Codec`` in ``repro/core/codec.py``.  Capabilities are
@@ -222,4 +263,5 @@ Migration note (deprecated v1 surface, kept as delegating shims):
     read-only aliases).
 """
 
-from . import device, engine, invindex, query, scores, serve  # noqa: F401
+from . import (device, engine, invindex, query, scores, serve,  # noqa: F401
+               shards)

@@ -206,6 +206,10 @@ class DeviceArena:
     def __init__(self, idx, build_fused: bool = True):
         self.idx = idx
         self.n_docs = idx.n_docs
+        # doc-range shard generations (repro.index.shards) declare the global
+        # docid window they serve; unsharded indexes cover [0, n_docs)
+        self.doc_lo = int(getattr(idx, "doc_lo", 0))
+        self.doc_hi = int(getattr(idx, "doc_hi", idx.n_docs))
         self.stats = {"device_calls": 0, "blocks_device": 0, "blocks_host": 0,
                       "fused_calls": 0, "fused_blocks": 0}
         self._loc: dict = {}

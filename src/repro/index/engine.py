@@ -76,6 +76,7 @@ fused=True)`` maps to ``to_device(fused=True)``; the one-shot helpers in
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import difflib
 import json
@@ -85,6 +86,7 @@ from collections import OrderedDict
 from typing import Mapping, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
@@ -117,10 +119,46 @@ class CrossoverTable:
     real crossing, and extrapolating one would demote production-sized
     batches off the arenas.  In that case ``host_batch_max`` is None and
     ``plan()`` falls back to the static ``HOST_BATCH_MAX`` rule.  A backend
-    where the device wins everywhere yields 0 (never demote)."""
+    where the device wins everywhere yields 0 (never demote).
+
+    ``mode_cuts`` refines the single cell per query mode: a baseline whose
+    report carries per-mode qps curves (``mode_qps``: mode -> {"host"/
+    "device": {batch: qps}}) yields one cell per measured mode, derived with
+    the same conservative rule.  Ranked modes amortize quantized-score
+    uploads and the final-merge sync over the batch, so they typically cross
+    to the device EARLIER than plain AND — one blended cell would demote
+    ranked batches the device already wins.  ``cut_for(mode)`` resolves the
+    cell ``plan()`` applies: the mode's own cell when measured (even a
+    no-crossing None — then the static rule decides), else the blended
+    ``host_batch_max``."""
     host_batch_max: Optional[int]
     sizes: tuple = ()
     source: str = "BENCH_query.json"
+    mode_cuts: tuple = ()       # ((mode, cut_or_None), ...) measured cells
+
+    def cut_for(self, mode: str) -> Optional[int]:
+        """The demotion threshold for one query mode (see class docstring)."""
+        for m, c in self.mode_cuts:
+            if m == mode:
+                return c
+        return self.host_batch_max
+
+    @staticmethod
+    def _derive(host: Mapping, dev: Mapping):
+        """The conservative crossover rule over one pair of qps curves:
+        (cut, common sizes) — cut None when there is no true crossing."""
+        sizes = sorted(set(host) & set(dev))
+        if not sizes:
+            return None, ()
+        if all(dev[b] > host[b] for b in sizes):
+            return 0, tuple(sizes)
+        cut = None
+        for b in sizes:
+            larger = [s for s in sizes if s > b]
+            if (host[b] >= dev[b] and larger
+                    and all(dev[s] > host[s] for s in larger)):
+                cut = b
+        return cut, tuple(sizes)
 
     @classmethod
     def from_bench(cls, report: Mapping, source: str = "BENCH_query.json"
@@ -129,18 +167,18 @@ class CrossoverTable:
                 for b, q in (report.get("host_qps") or {}).items()}
         dev = {int(b): float(q)
                for b, q in (report.get("device_qps") or {}).items()}
-        sizes = sorted(set(host) & set(dev))
-        if not sizes:
-            return cls(None, (), source)
-        if all(dev[b] > host[b] for b in sizes):
-            return cls(0, tuple(sizes), source)
-        cut = None
-        for b in sizes:
-            larger = [s for s in sizes if s > b]
-            if (host[b] >= dev[b] and larger
-                    and all(dev[s] > host[s] for s in larger)):
-                cut = b
-        return cls(cut, tuple(sizes), source)
+        cut, sizes = cls._derive(host, dev)
+        mode_cuts = []
+        for m in sorted(report.get("mode_qps") or {}):
+            curves = report["mode_qps"][m] or {}
+            mh = {int(b): float(q)
+                  for b, q in (curves.get("host") or {}).items()}
+            md = {int(b): float(q)
+                  for b, q in (curves.get("device") or {}).items()}
+            mc, msz = cls._derive(mh, md)
+            if msz:
+                mode_cuts.append((m, mc))
+        return cls(cut, sizes, source, tuple(mode_cuts))
 
 
 def _repo_root() -> str:
@@ -348,7 +386,7 @@ class _ExecCtx:
         -cache entries carry.
     """
     __slots__ = ("gen", "delta", "dead", "doclen", "n_docs", "avdl",
-                 "mutated", "skey", "_df", "_live_dev")
+                 "mutated", "skey", "_df", "_live_dev", "_live_host")
 
     def __init__(self, idx):
         gen = getattr(idx, "gen", idx)
@@ -356,6 +394,7 @@ class _ExecCtx:
         self.mutated = bool(getattr(idx, "mutated", False))
         self._df: dict = {}        # term -> live df memo
         self._live_dev = None      # uploaded packed live bitmap (per epoch)
+        self._live_host = None     # pre-packed host words (shard ctxs only)
         if self.mutated:
             self.delta = idx.delta.snapshot()
             self.dead = idx.tomb.sorted_ids(below=gen.n_docs)
@@ -377,10 +416,14 @@ class _ExecCtx:
     def live_dev(self, words: int):
         """The epoch's packed live bitmap as ONE device row, uploaded on
         first use and reused for every round of every batch in the epoch
-        (the gate never downloads anything)."""
+        (the gate never downloads anything).  Shard ctxs pre-pack their
+        boundary-sliced words (``pack_live_words_range``), so a tombstone
+        epoch uploads only each shard's span of the live bitmap."""
         if self._live_dev is None:
-            self._live_dev = jnp.asarray(intersect_rounds.pack_live_words(
-                self.dead, self.gen.n_docs, words))
+            packed = (self._live_host if self._live_host is not None
+                      else intersect_rounds.pack_live_words(
+                          self.dead, self.gen.n_docs, words))
+            self._live_dev = jnp.asarray(packed)
         return self._live_dev
 
 
@@ -437,12 +480,21 @@ class QueryEngine:
         #   density-adaptive bitmap representation (no unpack / prefix sum)
         # tomb_gates: live-bitmap gates applied on device (uploads, not
         #   downloads — the resident paths stay download-free under deletes)
+        # merge_syncs / collective_bytes: sharded ranked batches' final
+        #   top-k merges (the ONE collective per batch) and their wire bytes
+        # shard_final_syncs: per-shard end-of-batch result downloads under
+        #   sharded execution (each shard contributes one, like final_syncs)
         self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
                           "fallback_decodes": 0, "resident_rounds": 0,
                           "cand_syncs": 0, "final_syncs": 0,
                           "score_rounds": 0, "score_syncs": 0,
                           "blocks_pruned": 0, "blocks_scored": 0,
-                          "blocks_dense": 0, "tomb_gates": 0}
+                          "blocks_dense": 0, "tomb_gates": 0,
+                          "merge_syncs": 0, "collective_bytes": 0,
+                          "shard_final_syncs": 0}
+        self._shard_cfg = None     # doc-range sharded serving config
+        self._sctx_cache: dict = {}  # (skey, lo, hi) -> shard _ExecCtx
+        self._last_shard_cands = None  # debug: last ranked per-shard cands
         # (gid, kind, work-list) -> the round's gathered device arrays
         # (docid rows / score rows / dense windows), immutable per
         # generation; see _round_memo
@@ -490,15 +542,40 @@ class QueryEngine:
             return a
         return ctx.gen.to_device(build_fused=self._fused)
 
-    def to_device(self, fused=None) -> "QueryEngine":
+    def to_device(self, fused=None, shards=None, mesh=None,
+                  bounds=None) -> "QueryEngine":
         """Switch the engine onto the device-resident arenas: all subsequent
         decodes go through batched lane-parallel device calls (with numpy
         fallback per block for codecs the arena doesn't cover).  ``fused``
         additionally routes eligible AND rounds through the fused
         decode+bitmap-AND Pallas kernel; its tile arenas are only built (or
-        upgraded onto a cached arena) when actually requested."""
+        upgraded onto a cached arena) when actually requested.
+
+        Doc-range sharded serving: any of ``shards`` (a count — boundaries
+        derived from build metadata, :meth:`repro.index.shards.ShardSpec
+        .derive`), ``bounds`` (explicit boundary tuple ``(0, ..., n_docs)``,
+        uneven and empty ranges legal), or ``mesh`` (a 1-D jax mesh, one
+        device per shard — absent or undersized, the shards run logically on
+        the default device with identical results) splits every generation
+        into self-contained per-shard engines (``_shard_engines``).  All
+        resident rounds then run shard-local; ranked modes merge with ONE
+        collective per batch (``_execute_sharded``)."""
         if fused is not None:
             self._fused = fused
+        if shards is not None or bounds is not None or mesh is not None:
+            b = tuple(int(x) for x in bounds) if bounds is not None else None
+            n = (int(shards) if shards is not None
+                 else len(b) - 1 if b is not None
+                 else int(mesh.devices.size))
+            if n < 1:
+                raise ValueError(f"need at least one shard, got {n}")
+            if b is not None and len(b) - 1 != n:
+                raise ValueError(
+                    f"bounds {b} define {len(b) - 1} shard(s), not {n}")
+            self._shard_cfg = {"n": n, "bounds": b, "mesh": mesh}
+            self.arena = None           # shards own the arenas
+            self._shard_engines(self._ctx_now())    # build eagerly
+            return self
         arena = self.idx.to_device(build_fused=self._fused)
         if (self.arena is None
                 or getattr(self.arena.idx, "gen", self.arena.idx)
@@ -880,21 +957,45 @@ class QueryEngine:
         return self._round_memo(
             key, lambda: sa.rows(pairs + [pairs[0]] * (p - len(pairs))))
 
+    def _and_qterms(self, queries: list, ctx: _ExecCtx) -> list:
+        """Per-query known terms sorted rarest-first (df ascending) with the
+        resident AND path's mutation-epoch semantics: a query whose live
+        terms include a delta-only term has no generation matches at all and
+        collapses to the ``[]`` sentinel (seeds empty; the caller unions in
+        the delta-segment scan).  Factored out so sharded execution can
+        resolve the batch ONCE on the parent and hand each shard its
+        restriction (``_shard_qterms``)."""
+        idx = ctx.gen
+        if not ctx.mutated:
+            return [sorted((t for t in q if t in idx.terms),
+                           key=lambda t: idx.terms[t].df) for q in queries]
+        qterms = []
+        for q in queries:
+            known = [t for t in q if self._df_live(t, ctx) > 0]
+            if any(t not in idx.terms for t in known):
+                qterms.append([])       # delta-only live term: no base match
+            else:
+                qterms.append(sorted(known, key=lambda t: idx.terms[t].df))
+        return qterms
+
     def _and_many_resident(self, queries: list,
                            terms: Mapping[int, TermCaps] | None = None,
-                           use_fused: bool = False) -> list:
+                           use_fused: bool = False,
+                           qterms: list | None = None) -> list:
         """AND the batch device-resident; the single host copy turns the
         final bitmaps into sorted docid arrays (``_and_bitmap_resident``
         keeps everything before that copy on device — the ``and_scored``
         path consumes the bitmap directly and never downloads it)."""
-        bm, _, _ = self._and_bitmap_resident(queries, terms, use_fused)
+        bm, _, _ = self._and_bitmap_resident(queries, terms, use_fused,
+                                             qterms=qterms)
         self.dev_stats["final_syncs"] += 1
         return intersect_rounds.extract_ids(np.asarray(bm)[:len(queries)],
                                             self._cur().gen.n_docs)
 
     def _and_bitmap_resident(self, queries: list,
                              terms: Mapping[int, TermCaps] | None = None,
-                             use_fused: bool = False):
+                             use_fused: bool = False,
+                             qterms: list | None = None):
         """AND the batch with candidates device-resident across rounds.
 
         Round 0 scatters every query's rarest term into its row of a
@@ -918,7 +1019,10 @@ class QueryEngine:
         Returns (bitmap, qterms, cov) — the (nqp, words) device bitmap, the
         per-query known terms sorted rarest-first, and the per-query seed
         coverage intervals (for further static block selection).  Results
-        are bit-identical to ``and_query`` per query.
+        are bit-identical to ``and_query`` per query.  An injected
+        ``qterms`` (sharded execution) replaces the per-query resolution —
+        the caller already computed it against the GLOBAL epoch and
+        restricted it to this engine's doc range.
         """
         ctx = self._cur()
         idx = ctx.gen
@@ -927,18 +1031,8 @@ class QueryEngine:
         words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         if nq == 0:
             return jnp.zeros((0, words), jnp.uint32), [], {}
-        if ctx.mutated:
-            qterms = []
-            for q in queries:
-                known = [t for t in q if self._df_live(t, ctx) > 0]
-                if any(t not in idx.terms for t in known):
-                    qterms.append([])   # delta-only live term: no base match
-                else:
-                    qterms.append(sorted(known,
-                                         key=lambda t: idx.terms[t].df))
-        else:
-            qterms = [sorted((t for t in q if t in idx.terms),
-                             key=lambda t: idx.terms[t].df) for q in queries]
+        if qterms is None:
+            qterms = self._and_qterms(queries, ctx)
         nqp = _bucket(nq)
         bm = jnp.zeros((nqp, words), jnp.uint32)
 
@@ -1347,8 +1441,31 @@ class QueryEngine:
         nq = len(queries)
         if nq == 0:
             return []
-        self.arena.ensure_scores()
-        sa = self.arena.scores
+        known, base_ts, tomb_only, armed, margins_l, iqs_l = \
+            self._ranked_params(queries, k, ctx)
+        if known is None:
+            return [[] for _ in queries]
+        acc, member, margins, iq_dev, width, _ = self._ranked_accumulate(
+            queries, k, mode, terms, use_fused, base_ts=base_ts, armed=armed,
+            tomb_only=tomb_only, margins_l=margins_l, iqs_l=iqs_l)
+        theta = topk.topk_threshold(acc, min(k, width))
+        cand_bm = topk.candidate_bitmap(acc, member, theta,
+                                        jnp.asarray(margins), iq_dev)
+        # the single host copy: candidate bitmaps -> exact float rescore
+        self.dev_stats["final_syncs"] += 1
+        cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
+                                            idx.n_docs)
+        return self._ranked_rescore(queries, cand, k, mode, known, ctx)
+
+    def _ranked_params(self, queries: list, k: int, ctx: _ExecCtx):
+        """The batch's epoch-derived ranked parameters, resolved once
+        against the GLOBAL ctx (sharded execution computes them on the
+        parent and injects them into every shard — a shard's own view would
+        mis-derive them: shard-local dfs deflate iq unsoundly, and a shard
+        never sees the delta, so it would wrongly re-arm a delta-bearing
+        epoch).  Returns (known, base_ts, tomb_only, armed, margins_l,
+        iqs_l), with known None when the batch trivially yields empties."""
+        idx = ctx.gen
         if ctx.mutated:
             known = [[t for t in q if self._df_live(t, ctx) > 0]
                      for q in queries]
@@ -1357,7 +1474,43 @@ class QueryEngine:
             known = [[t for t in q if t in idx.terms] for q in queries]
             base_ts = known
         if k <= 0 or not any(known):
-            return [[] for _ in queries]
+            return None, None, False, False, None, None
+        # tombstone-only epoch: no delta docs and corpus stats untouched
+        # (deletes never shrink the doc space or rewrite doclens — the
+        # array check guards the doclen-override corner), so pruning stays
+        # armed through the idf-ratio deflation
+        tomb_only = (ctx.mutated and len(ctx.delta) == 0
+                     and ctx.n_docs == idx.n_docs
+                     and np.array_equal(ctx.doclen, idx.doclen))
+        armed = not ctx.mutated or tomb_only
+        margins_l = [len(ts) if armed else _KEEP_ALL_MARGIN for ts in known]
+        iqs_l = ([self._iq_tomb(ts, ctx) if ts else 1 << 16 for ts in known]
+                 if tomb_only else [1 << 16] * len(queries))
+        return known, base_ts, tomb_only, armed, margins_l, iqs_l
+
+    def _ranked_accumulate(self, queries: list, k: int, mode: str,
+                           terms: Mapping[int, TermCaps] | None,
+                           use_fused: bool, *, base_ts: list, armed: bool,
+                           tomb_only: bool, margins_l: list, iqs_l: list,
+                           qterms: list | None = None,
+                           theta0_l: list | None = None):
+        """The round-loop core of :meth:`_ranked_resident`: accumulate the
+        batch's quantized impact codes device-resident and return the final
+        device state ``(acc, member, margins, iq_dev, width, words)`` — no
+        threshold, no download.  Epoch-derived inputs (``base_ts`` ...
+        ``iqs_l``) are INJECTED (:meth:`_ranked_params`): under sharded
+        execution this engine serves one doc-range shard and they must come
+        from the parent's global epoch.  ``theta0_l`` optionally overrides
+        the static OR thresholds — the sharded path pools per-shard theta0
+        host-side (max over shards is sound: some shard provably holds k
+        docs reaching it) and seeds every shard with the pooled value; the
+        per-round adaptive promotion stays shard-local, so rounds still run
+        with zero cross-shard syncs."""
+        ctx = self._cur()
+        idx = ctx.gen
+        nq = len(queries)
+        self.arena.ensure_scores()
+        sa = self.arena.scores
         words, crows = intersect_rounds.bitmap_geometry(idx.n_docs)
         nqp = _bucket(nq)
         width = topk.accum_width(idx.n_docs)
@@ -1365,7 +1518,8 @@ class QueryEngine:
         member = jnp.zeros((nqp, words), jnp.uint32)
         gate = cov = None
         if mode == "and_scored":
-            gate, _, cov = self._and_bitmap_resident(queries, terms, use_fused)
+            gate, _, cov = self._and_bitmap_resident(queries, terms,
+                                                     use_fused, qterms=qterms)
         eff_gate = gate
         if gate is None and ctx.mutated and len(ctx.dead):
             # OR mode under deletes: the epoch's live row gates every lane
@@ -1379,25 +1533,15 @@ class QueryEngine:
                           jnp.full((nqp, words), jnp.uint32(0xFFFFFFFF))
                           ).reshape(nqp * crows, -1)
         ar = self.arena
-        # tombstone-only epoch: no delta docs and corpus stats untouched
-        # (deletes never shrink the doc space or rewrite doclens — the
-        # array check guards the doclen-override corner), so pruning stays
-        # armed through the idf-ratio deflation
-        tomb_only = (ctx.mutated and len(ctx.delta) == 0
-                     and ctx.n_docs == idx.n_docs
-                     and np.array_equal(ctx.doclen, idx.doclen))
-        armed = not ctx.mutated or tomb_only
         order = [sorted(ts, key=lambda t: -sa.term_max[t]) for ts in base_ts]
         margins = np.zeros(nqp, np.int32)
-        margins[:nq] = [len(ts) if armed else _KEEP_ALL_MARGIN
-                        for ts in known]
+        margins[:nq] = margins_l
         iqs = np.full(nqp, 1 << 16, np.int64)
-        if tomb_only:
-            iqs[:nq] = [self._iq_tomb(ts, ctx) if ts else 1 << 16
-                        for ts in known]
+        iqs[:nq] = iqs_l
         if mode == "or" and armed:
-            theta0 = [(sa.theta0_live(ts, k, ctx.dead) if tomb_only
-                       else sa.theta0(ts, k)) for ts in base_ts]
+            theta0 = (list(theta0_l) if theta0_l is not None else
+                      [(sa.theta0_live(ts, k, ctx.dead) if tomb_only
+                        else sa.theta0(ts, k)) for ts in base_ts])
         else:
             theta0 = [0] * nq
         th0 = np.zeros(nqp, np.uint32)
@@ -1470,13 +1614,16 @@ class QueryEngine:
                 # full k — fewer pooled groups than k would over-promote)
                 theta_dev = jnp.maximum(theta_dev,
                                         topk.pooled_threshold(acc, k))
-        theta = topk.topk_threshold(acc, min(k, width))
-        cand_bm = topk.candidate_bitmap(acc, member, theta,
-                                        jnp.asarray(margins), iq_dev)
-        # the single host copy: candidate bitmaps -> exact float rescore
-        self.dev_stats["final_syncs"] += 1
-        cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
-                                            idx.n_docs)
+        return acc, member, margins, iq_dev, width, words
+
+    def _ranked_rescore(self, queries: list, cand: list, k: int, mode: str,
+                        known: list, ctx: _ExecCtx) -> list:
+        """The exact float tail shared by the unsharded and sharded ranked
+        paths: block-lazy batch rescore on an unmutated epoch, else the
+        per-query delta-segment union + live-stat oracle.  ``cand`` holds
+        GLOBAL sorted docids (sharded execution translates each shard's
+        extraction by its range base before concatenating), so the tail is
+        bitwise identical either way."""
         if not ctx.mutated:
             return self._rescore_batch_blockwise(queries, cand, k)
         out = []
@@ -1488,6 +1635,261 @@ class QueryEngine:
                      else _EMPTY_U32)
             out.append(self._score_docs(q, _merge_disjoint(c, d), k))
         return out
+
+    # ---- doc-range sharded execution ---------------------------------------- #
+
+    def _shard_engines(self, ctx: _ExecCtx):
+        """The per-shard serving set for ``ctx``'s generation: a
+        :class:`repro.index.shards.ShardSpec` plus one sub-engine per
+        NON-EMPTY shard (empty ranges hold ``None``), each over a
+        self-contained stats-fixed shard generation
+        (:func:`repro.index.shards.shard_generation`).  The whole set is
+        built eagerly and cached ON the generation keyed by (bounds, fused),
+        so a ``compact()`` swaps every shard atomically: a pinned plan keeps
+        the old generation's set addressable through its ctx, and the new
+        epoch's first query builds the new generation's set — mixed
+        -generation serving is impossible by construction.  With a mesh of
+        one device per shard, each shard's arenas (and its rounds, via
+        ``_pinned``) are placed on its own device; otherwise the shards run
+        logically on the default device with identical results."""
+        from . import shards as shards_lib
+        cfg = self._shard_cfg
+        gen = ctx.gen
+        bounds = cfg["bounds"]
+        if bounds is not None and bounds[-1] == gen.n_docs:
+            spec = shards_lib.ShardSpec(bounds)
+        else:
+            # derived boundaries — also the fallback when explicit bounds
+            # went stale across a compaction (the doc space changed)
+            spec = shards_lib.ShardSpec.derive(gen, cfg["n"])
+        mesh = cfg["mesh"]
+        key = (spec.bounds, self._fused)
+        cache = getattr(gen, "_shard_serving", None)
+        if cache is None:
+            cache = gen._shard_serving = {}
+        got = cache.get(key)
+        if got is None:
+            devs = (list(mesh.devices.flat)
+                    if mesh is not None and mesh.devices.size == spec.n_shards
+                    else None)
+            engs = []
+            for s, (lo, hi) in enumerate(spec.ranges()):
+                if hi <= lo:
+                    engs.append(None)
+                    continue
+                dev = devs[s] if devs is not None else None
+                with (jax.default_device(dev) if dev is not None
+                      else contextlib.nullcontext()):
+                    sgen = shards_lib.shard_generation(gen, lo, hi)
+                    eng = QueryEngine(sgen).to_device(fused=self._fused)
+                    eng.arena.ensure_scores()
+                eng._shard_device = dev
+                engs.append(eng)
+            cache[key] = got = (spec, engs)
+        return got[0], got[1], mesh
+
+    def _shard_ctx(self, ctx: _ExecCtx, lo: int, hi: int, sgen) -> _ExecCtx:
+        """A shard's frozen view of the parent epoch: tombstones translated
+        into the shard's local docid space, an EMPTY delta snapshot (delta
+        docids all sit above the generation's doc space, so no shard serves
+        them — the parent unions the delta scan into final results), and
+        the parent's live stats where they matter.  The packed live bitmap
+        is PRE-SLICED at the shard boundary (``pack_live_words_range``), so
+        a tombstone epoch uploads only each shard's words, not the whole
+        corpus's, on every shard."""
+        key = (ctx.skey, lo, hi)
+        got = self._sctx_cache.get(key)
+        if got is not None:
+            return got
+        sctx = _ExecCtx.__new__(_ExecCtx)
+        sctx.gen = sgen
+        sctx.mutated = ctx.mutated
+        sctx._df = {}
+        sctx._live_dev = None
+        sctx._live_host = None
+        if ctx.mutated:
+            from .segments import DeltaSegment
+            sctx.delta = DeltaSegment.empty_snapshot()
+        else:
+            sctx.delta = None
+        dead = ctx.dead
+        sctx.dead = ((dead[(dead >= lo) & (dead < hi)] - lo)
+                     if len(dead) else _EMPTY_I64)
+        sctx.doclen = np.asarray(ctx.doclen)[lo:hi]
+        sctx.n_docs = hi - lo
+        sctx.avdl = ctx.avdl
+        sctx.skey = tuple(ctx.skey) + (lo, hi)
+        if len(sctx.dead):
+            words, _ = intersect_rounds.bitmap_geometry(sgen.n_docs)
+            sctx._live_host = intersect_rounds.pack_live_words_range(
+                ctx.dead, lo, hi, words)
+        self._sctx_cache[key] = sctx
+        return sctx
+
+    @staticmethod
+    def _shard_qterms(ts: list, sgen) -> list:
+        """One query's global rarest-first AND term list restricted to a
+        shard.  A known term with no postings in the shard's doc range means
+        NO doc in the range can match the conjunction — the ``[]`` sentinel
+        (same convention as the delta-only case).  Otherwise the parent's
+        order is kept verbatim: shard dfs are fixed up to the global ones,
+        so re-sorting shard-side would reproduce it anyway."""
+        if not ts or any(t not in sgen.terms for t in ts):
+            return []
+        return list(ts)
+
+    @staticmethod
+    @contextlib.contextmanager
+    def _pinned(eng: "QueryEngine", sctx: _ExecCtx):
+        """Run a sub-engine call under its shard ctx (and its mesh device,
+        when placed): the shard's rounds then resolve ``_cur()`` to the
+        shard's frozen epoch view, never the parent's."""
+        prev = eng._ctx
+        eng._ctx = sctx
+        dev = getattr(eng, "_shard_device", None)
+        try:
+            if dev is not None:
+                with jax.default_device(dev):
+                    yield
+            else:
+                yield
+        finally:
+            eng._ctx = prev
+
+    def _execute_sharded(self, plan: ExecutionPlan, ctx: _ExecCtx) -> list:
+        """Planned execution over the doc-range shard set: every resident
+        round runs shard-local (doc-wise partitioning means AND candidates
+        and score accumulators never cross shards — zero cross-shard
+        candidate syncs), ranked modes merge with ONE collective of
+        per-shard (k-th sum, candidate count) statistics, and the exact
+        float tail runs on the parent against global docids.  Results are
+        bitwise identical to the unsharded paths."""
+        queries = [list(q) for q in plan.queries]
+        fused = plan.placement == "fused"
+        spec, engs, mesh = self._shard_engines(ctx)
+        parts = [(lo, hi, eng, self._shard_ctx(ctx, lo, hi, eng.idx))
+                 for (lo, hi), eng in zip(spec.ranges(), engs)
+                 if eng is not None]
+        if plan.mode == "and":
+            return self._sharded_and(queries, fused, parts, ctx)
+        return self._sharded_ranked(queries, plan.k, plan.mode, fused,
+                                    parts, mesh, ctx)
+
+    def _sharded_and(self, queries: list, fused: bool, parts: list,
+                     ctx: _ExecCtx) -> list:
+        """AND across shards: the parent resolves the batch's known terms
+        once, each shard intersects its restriction device-resident, and the
+        per-shard extractions concatenate in range order (already globally
+        sorted — ranges are disjoint and ascending)."""
+        qterms = self._and_qterms(queries, ctx)
+        per_q = [[] for _ in queries]
+        for lo, hi, eng, sctx in parts:
+            sub_q = [self._shard_qterms(ts, eng.idx) for ts in qterms]
+            with self._pinned(eng, sctx):
+                ids = eng._and_many_resident(queries, None, fused,
+                                             qterms=sub_q)
+            self.dev_stats["shard_final_syncs"] += 1
+            for i, a in enumerate(ids):
+                if len(a):
+                    per_q[i].append(a + np.uint32(lo))
+        base = [(ps[0] if len(ps) == 1 else np.concatenate(ps)) if ps
+                else _EMPTY_U32.copy() for ps in per_q]
+        if not ctx.mutated:
+            return base
+        out = []
+        for q, b in zip(queries, base):
+            known = [t for t in q if self._df_live(t, ctx) > 0]
+            d = ctx.delta.scan_and(known) if known else _EMPTY_U32
+            out.append(_merge_disjoint(b, d))
+        return out
+
+    def _sharded_ranked(self, queries: list, k: int, mode: str, fused: bool,
+                        parts: list, mesh, ctx: _ExecCtx) -> list:
+        """Ranked top-k across shards, margin-preserving merge:
+
+        1. the parent derives the epoch parameters ONCE
+           (:meth:`_ranked_params`) and, for armed OR batches, pools the
+           per-shard static thresholds host-side (max over shards — sound:
+           the argmax shard provably holds k docs reaching its theta0);
+        2. every shard runs the full round loop shard-local
+           (:meth:`_ranked_accumulate` under ``_pinned``) — zero cross
+           -shard candidate syncs, the adaptive promotion stays per-shard;
+        3. the ONE collective: per-shard (k-th quantized sum, candidate
+           count) statistics all-gather + max (``collectives
+           .merge_topk_stats`` — under ``shard_map`` when a mesh places the
+           shards, host-stacked otherwise, same wire bytes either way).
+           theta_merged = max_s theta_s <= the global k-th sum, so cutting
+           every shard at theta_merged - margin keeps every global top-k
+           doc: the union of per-shard candidate bitmaps stays a guaranteed
+           superset of the float top-k under the SAME quantization-margin
+           contract as the unsharded path (parent margins >= shard margins,
+           global iq deflation injected);
+        4. per-shard candidate extraction, translated to global docids and
+           concatenated in range order, feeds the parent's exact float tail
+           (:meth:`_ranked_rescore`) — bitwise identical to unsharded."""
+        nq = len(queries)
+        known, base_ts, tomb_only, armed, margins_l, iqs_l = \
+            self._ranked_params(queries, k, ctx)
+        if known is None or not parts:
+            return [[] for _ in queries]
+        theta0_l = None
+        if mode == "or" and armed:
+            pooled = [0] * nq
+            for lo, hi, eng, sctx in parts:
+                sa = eng.arena.ensure_scores().scores
+                for i, ts in enumerate(base_ts):
+                    sts = [t for t in ts if t in eng.idx.terms]
+                    if not sts:
+                        continue
+                    th = (sa.theta0_live(sts, k, sctx.dead) if tomb_only
+                          else sa.theta0(sts, k))
+                    if th > pooled[i]:
+                        pooled[i] = int(th)
+            theta0_l = pooled
+        and_q = (self._and_qterms(queries, ctx) if mode == "and_scored"
+                 else None)
+        per_shard, th_parts, cnt_parts = [], [], []
+        for lo, hi, eng, sctx in parts:
+            sts = [[t for t in ts if t in eng.idx.terms] for ts in base_ts]
+            qt = ([self._shard_qterms(ts, eng.idx) for ts in and_q]
+                  if and_q is not None else None)
+            with self._pinned(eng, sctx):
+                acc, member, margins, iq_dev, _, _ = eng._ranked_accumulate(
+                    queries, k, mode, None, fused, base_ts=sts, armed=armed,
+                    tomb_only=tomb_only, margins_l=margins_l, iqs_l=iqs_l,
+                    qterms=qt, theta0_l=theta0_l)
+                # raw k on purpose: a shard holding fewer than k scored docs
+                # reports theta 0 (the sound degenerate answer) — min(k,
+                # width) would report its width-th sum, which can EXCEED the
+                # global k-th and break the superset contract
+                th, cnt = topk.topk_stats(acc, k)
+            per_shard.append((lo, hi, eng, sctx, acc, member, margins,
+                              iq_dev))
+            th_parts.append(th)
+            cnt_parts.append(cnt)
+        from repro.distributed import collectives
+        theta_m, _, wire = collectives.merge_topk_stats(th_parts, cnt_parts,
+                                                        mesh=mesh)
+        self.dev_stats["merge_syncs"] += 1
+        self.dev_stats["collective_bytes"] += int(wire)
+        theta_dev = jnp.asarray(theta_m.astype(np.uint32))
+        cand_parts = [[] for _ in queries]
+        shard_cands = []
+        for lo, hi, eng, sctx, acc, member, margins, iq_dev in per_shard:
+            with self._pinned(eng, sctx):
+                bm = topk.candidate_bitmap(acc, member, theta_dev,
+                                           jnp.asarray(margins), iq_dev)
+                self.dev_stats["shard_final_syncs"] += 1
+                ids = intersect_rounds.extract_ids(np.asarray(bm)[:nq],
+                                                   hi - lo)
+            shard_cands.append(ids)
+            for i, a in enumerate(ids):
+                if len(a):
+                    cand_parts[i].append(a + np.uint32(lo))
+        self._last_shard_cands = shard_cands
+        cand = [(ps[0] if len(ps) == 1 else np.concatenate(ps)) if ps
+                else _EMPTY_U32 for ps in cand_parts]
+        return self._ranked_rescore(queries, cand, k, mode, known, ctx)
 
     # ---- planned execution -------------------------------------------------- #
 
@@ -1514,11 +1916,12 @@ class QueryEngine:
         _check_mode(batch.mode)
         ctx = self._cur()
         note = ""
+        resident = self.arena is not None or self._shard_cfg is not None
         if placement is not None:
             if placement not in PLACEMENTS:
                 raise ValueError(f"unknown placement {placement!r}; "
                                  f"placements: {PLACEMENTS}")
-            if placement != "host" and self.arena is None:
+            if placement != "host" and not resident:
                 raise ValueError(
                     f"explicit placement {placement!r} needs device arenas; "
                     "call to_device() on this engine first")
@@ -1528,26 +1931,33 @@ class QueryEngine:
                     "call to_device(fused=True) on this engine first")
             note = f"placement {placement!r} pinned by caller"
         else:
-            placement = ("fused" if self.arena is not None and self._fused
-                         else "device" if self.arena is not None else "host")
+            placement = ("fused" if resident and self._fused
+                         else "device" if resident else "host")
             if placement != "host":
                 n = len(batch.queries)
                 xo = get_crossover()
-                if xo is not None and xo.host_batch_max is not None:
-                    if n <= xo.host_batch_max:
+                cut = xo.cut_for(batch.mode) if xo is not None else None
+                if cut is not None:
+                    if n <= cut:
                         note = (f"auto-placed host: batch={n} <= "
-                                f"host_batch_max={xo.host_batch_max} "
+                                f"host_batch_max={cut} for "
+                                f"mode={batch.mode!r} "
                                 f"(measured crossover, {xo.source}, "
                                 f"sizes={list(xo.sizes)})")
                         placement = "host"
                 elif n <= HOST_BATCH_MAX:
                     reason = ("no BENCH_query.json baseline" if xo is None
                               else f"{xo.source}: no host->device crossover "
-                                   f"measured")
+                                   f"measured for mode={batch.mode!r}")
                     note = (f"auto-placed host: batch={n} <= "
                             f"HOST_BATCH_MAX={HOST_BATCH_MAX} "
                             f"(static rule; {reason})")
                     placement = "host"
+        if self._shard_cfg is not None and placement != "host":
+            spec, _, mesh = self._shard_engines(ctx)
+            snote = (f"sharded x{spec.n_shards} bounds={list(spec.bounds)} "
+                     f"({'mesh-placed' if mesh is not None else 'logical'})")
+            note = f"{note}; {snote}" if note else snote
         if ctx.mutated:
             mnote = (f"pinned epoch {ctx.skey}: {len(ctx.dead)} tombstone(s), "
                      f"{len(ctx.delta)} delta doc(s)")
@@ -1561,11 +1971,16 @@ class QueryEngine:
                     blocks = ctx.gen.terms[t].blocks
                     name = blocks[0][1].codec if blocks else None
                     spec = codec_lib.get(name) if name is not None else None
+                    # sharded plans record the nominal capability only —
+                    # each shard re-probes its OWN arena's fused coverage
+                    # at execution (its block geometry differs)
                     terms[t] = TermCaps(
                         codec=name,
                         arena=bool(spec is not None and spec.arena is not None),
-                        fused=(placement == "fused" and self.arena.has_fused(
-                            t, range(len(blocks)))))
+                        fused=(placement == "fused"
+                               and (self._shard_cfg is not None
+                                    or self.arena.has_fused(
+                                        t, range(len(blocks))))))
                 elif ctx.delta is not None and ctx.delta.has_term(t):
                     # delta-only term: no compressed blocks, host scan only
                     terms[t] = TermCaps(codec=None, arena=False, fused=False)
@@ -1596,6 +2011,14 @@ class QueryEngine:
         _check_mode(plan.mode)
         ctx: _ExecCtx = plan.ctx if plan.ctx is not None else self._cur()
         if plan.placement != "host":
+            if self._shard_cfg is not None:
+                # sharded serving: the shard set (not self.arena) holds the
+                # arenas; sub-engines pin their shard ctxs per call
+                prev_ctx, self._ctx = self._ctx, ctx
+                try:
+                    return self._execute_sharded(plan, ctx)
+                finally:
+                    self._ctx = prev_ctx
             if self.arena is None:
                 raise ValueError(
                     f"plan placement {plan.placement!r} needs device arenas; "

@@ -197,11 +197,21 @@ class ScoreArena:
         n_docs = idx.n_docs
         doclen = np.asarray(idx.doclen)
         avdl = idx.avdl
+        # doc-range shard generations (repro.index.shards) carry the PARENT
+        # index's corpus statistics: df is already global in their fixed-up
+        # TermPostings, and stat_n_docs / stat_avdl / stat_gmax pin n_docs,
+        # avdl, and the quantizer scale to the parent's values so a shard's
+        # code for (term, doc) is bitwise the unsharded arena's code.  Only
+        # the *geometry* (stripe width, bitmap words, dense windows) stays
+        # local to the shard's doc range.
+        stat_n = int(getattr(idx, "stat_n_docs", n_docs))
+        stat_avdl = float(getattr(idx, "stat_avdl", avdl))
         # pass 1: float impacts per block (build-time tables give the global
         # max without decoding; hand-assembled indexes reconstruct lazily)
         gmax = 0.0
         for t in idx.terms:
             gmax = max(gmax, float(idx.impact_block_max(t).max(initial=0.0)))
+        gmax = float(getattr(idx, "stat_gmax", gmax))
         self.gmax = gmax
         self.delta = (gmax / CODE_MAX) if gmax > 0 else 1.0
         # docid stripes sized for ~STRIPE_TARGET range-bound cells per index
@@ -222,7 +232,7 @@ class ScoreArena:
             stripe = np.zeros(n_stripes, np.int32)
             for bi in range(len(tp.blocks)):
                 ids, tfs = idx.decode_block(t, bi)
-                sc = bm25_scores(tfs, doclen[ids], tp.df, n_docs, avdl)
+                sc = bm25_scores(tfs, doclen[ids], tp.df, stat_n, stat_avdl)
                 codes = np.minimum(np.floor(sc / self.delta),
                                    CODE_MAX).astype(np.uint32)
                 self.slot[(t, bi)] = len(tiles)

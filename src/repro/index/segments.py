@@ -87,6 +87,18 @@ class DeltaSegment:
         snap.frozen = True
         return snap
 
+    _empty: "DeltaSegment | None" = None
+
+    @classmethod
+    def empty_snapshot(cls) -> "DeltaSegment":
+        """The shared frozen empty segment.  Doc-range shard execution
+        contexts pin this: shard-local rounds never consult a delta — delta
+        docs live outside every shard's generation and are merged once, on
+        the parent, after the cross-shard candidate merge."""
+        if cls._empty is None:
+            cls._empty = cls().snapshot()
+        return cls._empty
+
     # ---- views -------------------------------------------------------------- #
 
     def __len__(self) -> int:

@@ -87,6 +87,21 @@ def pack_live_words(dead: np.ndarray, n_docs: int, words: int) -> np.ndarray:
     return np.packbits(bits, bitorder="little").view(np.uint32)
 
 
+def pack_live_words_range(dead: np.ndarray, lo: int, hi: int,
+                          words: int) -> np.ndarray:
+    """Per-shard form of :func:`pack_live_words`: the live row of the doc
+    range [lo, hi) in the range's *local* docid space (bit d is doc lo + d).
+
+    Doc-range sharded serving slices one mutation epoch's live mask at the
+    shard boundaries, so each shard uploads only its own ``words`` (sized by
+    ``bitmap_geometry(hi - lo)``) instead of the full doc-space bitmap.
+    ``dead`` is the epoch's sorted global tombstone array; entries outside
+    [lo, hi) are dropped before packing."""
+    dead = np.asarray(dead, np.int64)
+    sub = dead[(dead >= lo) & (dead < hi)] - lo
+    return pack_live_words(sub, hi - lo, words)
+
+
 # --------------------------------------------------------------------------- #
 # probe + scatter round (jnp; the generic-arena placement)
 # --------------------------------------------------------------------------- #

@@ -174,6 +174,30 @@ def topk_threshold(acc, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
+def topk_stats(acc, k: int):
+    """Per-query (theta, count) merge statistics for doc-range sharded top-k.
+
+    theta is the shard-local k-th largest accumulated sum — with the RAW k,
+    not ``min(k, width)``: a shard holding fewer than k scored docs must
+    report 0 (``_kth_descend`` stays at 0 when fewer than k entries are
+    >= 1), because its local "k-th" over fewer candidates would not be a
+    sound lower bound on the global k-th.  count is the shard's candidate
+    population at its own threshold (reporting / collective accounting).
+
+    Soundness of the merge (the shard-local margin argument): shard s has at
+    least k docs with sum >= theta_s, so globally at least k docs reach
+    theta_s and the global k-th sum is >= max_s theta_s.  Compacting every
+    shard at ``max_s theta_s`` therefore keeps a superset of the unsharded
+    candidate set — the one all-gather of these (theta, count) pairs is the
+    only cross-shard traffic in a ranked batch.
+    """
+    theta = _kth_descend(acc, k)
+    count = jnp.sum(acc >= jnp.maximum(theta, 1)[:, None], axis=1,
+                    dtype=jnp.int32)
+    return theta, count
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
 def pooled_threshold(acc, k: int):
     """Sound per-round lower bound on the k-th largest sum, over the 32-group
     max pool (32x fewer rank-count columns than :func:`topk_threshold`)."""

@@ -47,3 +47,12 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     ndev = int(np.prod(shape))
     dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
     return jax.sharding.Mesh(dev, axes, **_axis_kwargs(len(axes)))
+
+
+def serving_mesh(n_shards: int, axis: str = "shards"):
+    """1-D mesh for doc-range sharded serving: one device per shard, or None
+    when the backend has fewer devices than shards (the engine then runs the
+    shards logically on one device — same results, no placement)."""
+    if n_shards < 1 or len(jax.devices()) < n_shards:
+        return None
+    return make_host_mesh((n_shards,), (axis,))

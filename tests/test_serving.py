@@ -239,6 +239,25 @@ def test_crossover_from_bench_no_crossing_or_degenerate():
     assert CrossoverTable.from_bench({}).host_batch_max is None
 
 
+def test_crossover_from_bench_per_mode_cells():
+    # per-mode curves ("mode_qps") yield per-mode cells; cut_for falls back
+    # to the pooled host_batch_max only for modes with no measured curve
+    table = CrossoverTable.from_bench({
+        "host_qps": {"1": 100.0, "4": 90.0, "16": 50.0},
+        "device_qps": {"1": 20.0, "4": 80.0, "16": 200.0},
+        "mode_qps": {
+            "or": {"host": {"1": 50.0, "16": 40.0},
+                   "device": {"1": 60.0, "16": 90.0}},      # device always
+            "and_scored": {"host": {"1": 90.0, "16": 80.0},
+                           "device": {"1": 10.0, "16": 20.0}},  # no crossing
+        }})
+    assert table.host_batch_max == 4
+    assert dict(table.mode_cuts) == {"or": 0, "and_scored": None}
+    assert table.cut_for("or") == 0                 # never demote ranked-or
+    assert table.cut_for("and_scored") is None      # host wins everywhere
+    assert table.cut_for("and") == 4                # pooled fallback
+
+
 def test_plan_demotes_via_measured_crossover_table():
     engine = _engine(device=True)
     try:

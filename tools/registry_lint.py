@@ -42,7 +42,14 @@ Checks, per registered codec:
      lint-sized serve stream carries monotone non-decreasing stage
      timestamps (enqueue <= batch-close <= plan <= execute <= done), served
      traces carry all five stamps plus batch metadata, and batch records'
-     own stamps are ordered.
+     own stamps are ordered;
+ 10. shard consistency (doc-range sharded serving, lint corpus): every
+     ``ShardSpec`` partitions [0, n_docs) into disjoint covering ranges;
+     every per-shard generation carries the parent gid and global dfs, its
+     postings are bit-identical to the parent slice (translated by -lo,
+     union over shards == the parent), and its quantized impact codes and
+     block-max tables equal the parent's at the same (term, global doc) —
+     the statistics fixup the margin-preserving top-k merge depends on.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -354,6 +361,87 @@ def lint_bitmap_blocks(errors: list) -> None:
                 _fail(errors, f"{name}: {tag} block does not round-trip")
 
 
+def lint_shards(errors: list) -> None:
+    """Doc-range shard consistency on the lint corpus (both a mass-balanced
+    derived split and an explicit uneven one with an EMPTY shard): the spec
+    must partition the docid space; each shard generation must carry the
+    parent gid and GLOBAL dfs; the union of shard postings (translated back
+    by +lo) must equal the parent's; and each shard's quantized impact codes
+    and block-max tables must equal the parent's for the same (term, global
+    doc).  That last check is the one the sharded ranked path stands on: the
+    merged k-th threshold is only comparable across shards because every
+    shard quantizes with the parent's statistics."""
+    from repro.index.invindex import InvertedIndex
+    from repro.index.scores import ScoreArena, unpack_words_np
+    from repro.index.shards import ShardSpec, shard_generation
+
+    rng = np.random.default_rng(41)
+    n_docs = 40_000
+    postings = {}
+    for t, df in enumerate([40, 300, 900, 2000, 3500]):
+        ids = np.sort(rng.choice(n_docs, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    doclen = rng.integers(30, 300, n_docs).astype(np.int64)
+    gen = InvertedIndex.build(doclen, postings, codec="group_simple").gen
+    sa = ScoreArena.from_index(gen)
+    ptiles = np.asarray(sa.tiles)
+    pcodes = {}                       # term -> {global docid: quantized code}
+    for t, tp in gen.terms.items():
+        m = {}
+        for bi in range(len(tp.blocks)):
+            ids = gen.decode_block_ids(t, bi)
+            codes = unpack_words_np(ptiles[sa.slot[(t, bi)]], len(ids))
+            m.update(zip(ids.tolist(), codes.tolist()))
+        pcodes[t] = m
+
+    for spec in (ShardSpec.derive(gen, 3),
+                 ShardSpec((0, 100, 100, 33_000, n_docs))):
+        b = spec.bounds
+        if b[0] != 0 or b[-1] != n_docs:
+            _fail(errors, f"shards: {spec!r} does not cover [0, {n_docs})")
+            continue
+        union = {t: [] for t in gen.terms}
+        for lo, hi in spec.ranges():
+            if hi == lo:
+                continue
+            sg = shard_generation(gen, lo, hi)
+            if sg.gid != gen.gid:
+                _fail(errors, f"shards: [{lo},{hi}) gid {sg.gid} != parent "
+                              f"{gen.gid} (epoch pinning would break)")
+            ssa = ScoreArena.from_index(sg)
+            if ssa.delta != sa.delta:
+                _fail(errors, f"shards: [{lo},{hi}) quantizer delta "
+                              f"{ssa.delta} != parent {sa.delta}")
+            stiles = np.asarray(ssa.tiles)
+            for t, tp in sg.terms.items():
+                if tp.df != gen.terms[t].df:
+                    _fail(errors, f"shards: [{lo},{hi}) term {t} df {tp.df} "
+                                  f"!= global {gen.terms[t].df}")
+                for bi in range(len(tp.blocks)):
+                    ids = sg.decode_block_ids(t, bi)
+                    s = ssa.slot[(t, bi)]
+                    codes = unpack_words_np(stiles[s], len(ids))
+                    stored = int(ssa.block_max[s])
+                    if stored != int(codes.max(initial=0)):
+                        _fail(errors, f"shards: [{lo},{hi}) block-max "
+                                      f"[{t},{bi}] = {stored} != max stored "
+                                      f"code {int(codes.max(initial=0))}")
+                    want = [pcodes[t].get(int(d) + lo, -1) for d in ids]
+                    if codes.tolist() != want:
+                        _fail(errors, f"shards: [{lo},{hi}) term {t} block "
+                                      f"{bi} codes drift from the parent's "
+                                      f"at the same global docs")
+                    union[t].extend(int(d) + lo for d in ids)
+        for t in gen.terms:
+            parent_ids = np.concatenate(
+                [gen.decode_block_ids(t, bi)
+                 for bi in range(gen.n_blocks(t))]).astype(np.int64)
+            if union[t] != parent_ids.tolist():
+                _fail(errors, f"shards: {spec!r} union of term {t} postings "
+                              f"!= the parent postings (lost or duplicated "
+                              f"docs at the cuts)")
+
+
 def lint_serving_traces(errors: list) -> None:
     """Serving-trace discipline on a lint-sized stream: drive a short burst
     through the :class:`~repro.index.serve.IndexServer` and check every
@@ -415,6 +503,7 @@ def main() -> int:
     lint_score_tables(errors)
     lint_segments(errors)
     lint_bitmap_blocks(errors)
+    lint_shards(errors)
     lint_serving_traces(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
