@@ -93,7 +93,7 @@ def _kernel_cases():
         ("dense_score_round", topk.dense_score_round,
          (acc, bm, dense_tiles, dense_words, qslot, w0, ub, theta, iq, bm),
          {"gated": True}),
-        ("topk_threshold", topk.topk_threshold, (acc,), {"k": 10}),
+        ("topk_threshold", topk._topk_threshold_jit, (acc,), {"k": 10}),
         ("pooled_threshold", topk.pooled_threshold, (acc,), {"k": 10}),
         ("candidate_bitmap", topk.candidate_bitmap,
          (acc, bm, theta, margin, iq), {}),

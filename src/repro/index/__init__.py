@@ -218,6 +218,63 @@ topology.  ``BENCH_query.json`` tracks the scaling curves per shard count
 (qps per mode, merge syncs and collective bytes per ranked batch, and
 cross-shard round syncs — ZERO by construction).
 
+Observability (spans, typed metrics, the perf-regression gate): the
+``repro.obs`` package is the one instrumentation layer over everything
+above.
+
+  * **Spans** (``repro.obs.trace``): the serving lifecycle is recorded on
+    the server's own always-enabled ``Tracer`` — ``serve/request``
+    (admission -> delivery, one detached span per request whose endpoints
+    ARE the ``TraceRecord``'s enqueue/done stamps), ``serve/close`` (batch
+    forming), and ``serve/batch`` with ``serve/plan`` / ``serve/execute`` /
+    ``serve/deliver`` children that tile it exactly, so an exported trace
+    accounts for 100% of measured batch wall-clock (the CI smoke asserts
+    >= 90% via ``trace_coverage``).  Deep engine and kernel spans —
+    ``engine/plan``, ``engine/execute``, ``and/seed``, ``and/round``,
+    ``and/tomb_gate``, ``ranked/round``, ``ranked/tomb_gate``,
+    ``ranked/rescore``, ``sharded/merge``, ``decode/<codec>``,
+    ``kernel/extract_ids``, ``kernel/topk`` — go through the process-global
+    tracer (``repro.obs.enable_tracing()``), DISABLED by default so the
+    resident hot paths pay one attribute check; sub-engines stamp their own
+    ``shard<i>`` lane.  ``to_chrome_trace(stats.tracer, get_tracer())``
+    exports Chrome trace-event JSON loadable directly at
+    https://ui.perfetto.dev (one named track per lane: serve / engine /
+    shard<i> / device); ``python -m repro.launch.serve --index --smoke
+    --trace-out trace.json`` is the one-command path (CI uploads it as the
+    ``trace_smoke`` artifact).  Fenced device timing (``--fenced`` /
+    ``enable_tracing(True, fenced=True)``) brackets round spans with
+    ``jax.block_until_ready`` so durations attribute device wall-clock to
+    the producing kernel — off by default, keeping the zero-sync
+    discipline untouched; ``Tracer.profiler(logdir)`` hooks
+    ``jax.profiler.trace`` for real-TPU runs.
+  * **Typed metrics** (``repro.obs.metrics``): every engine owns a
+    ``MetricsRegistry`` of declared counters (labels drawn from the fixed
+    ``LABEL_KEYS`` vocabulary: engine / shard / placement / mode / codec /
+    tenant / outcome; duplicate registration raises; schema consistency
+    across instances is registry-linted via ``lint_metrics``).  The old
+    free-form ``engine.dev_stats`` dict survives as a live READ-ONLY view
+    (``DevStatsView``) over the same counters.  Per-call assertions use
+    scoped sampling — ``with engine.metrics.scoped() as s: ...;
+    s.delta("worklist_decodes")`` — instead of hand-rolled before/after
+    subtraction.  ``ServerStats`` carries its own registry
+    (requests/batches/latency by tenant + outcome) with Prometheus 0.0.4
+    text exposition: ``stats.snapshot(prometheus=True)`` or ``launch.serve
+    --metrics-out``.  Latency percentiles use the deterministic
+    nearest-rank rule (``repro.obs.metrics.nearest_rank``) so tiny-n
+    snapshots are reproducible observed values, monotone in q.
+  * **Perf-regression gate** (``repro.obs.regress`` +
+    ``tools/bench_gate.py``): the committed ``BENCH_query/mutation/
+    serving.json`` baselines are enforced contracts — CI regenerates them
+    at the smoke workload, then every shared ``*qps*`` leaf must hold
+    ``fresh >= baseline * min_ratio`` (floors in ``BENCH_tolerances.json``,
+    default 0.55) and the deterministic invariants are re-checked hard:
+    ``cand_syncs == 0`` / ``score_syncs == 0`` on the resident paths,
+    ``blocks_pruned > 0`` under 1% tombstones, decode dedup <= 1 per hot
+    block, zero cross-shard round syncs, zero Poisson shed, bitwise serving
+    parity.  ``bench_gate.py --self-test`` proves the gate has teeth by
+    synthesizing a 2x qps regression and asserting it fails (which pins
+    every floor into (0.5, 1.0]).
+
 Adding a codec (protocol v2): implement ``encode(np.uint32[N]) -> Encoded``
 and ``decode_np(Encoded) -> np.uint32[N]`` and register a
 ``repro.core.codec.Codec`` in ``repro/core/codec.py``.  Capabilities are

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.core.bits import ebw_np
+from repro.obs.trace import get_tracer
 from repro.kernels import decode_fused, intersect_rounds, topk
 from repro.kernels.bitpack import LANES
 from repro.kernels.intersect import bitmap_build_np
@@ -338,7 +339,9 @@ class DeviceArena:
             else:
                 by_codec.setdefault(name, []).append((j, slot, e))
         for name, items in by_codec.items():
-            self._groups[name].decode(items, out)
+            with get_tracer().span(f"decode/{name}", lane="device",
+                                   blocks=len(items)):
+                self._groups[name].decode(items, out)
             self.stats["device_calls"] += 1
             self.stats["blocks_device"] += len(items)
         for j, (t, bi, field) in host:
@@ -368,7 +371,9 @@ class DeviceArena:
                 by_codec.setdefault(name, []).append((j, slot))
         for name, items in by_codec.items():
             g = self._groups[name]
-            res, n_arr = g.decode_rows(np.asarray([s for _, s in items]))
+            with get_tracer().span(f"decode/{name}", lane="device",
+                                   blocks=len(items), resident=True):
+                res, n_arr = g.decode_rows(np.asarray([s for _, s in items]))
             if res.shape[1] != codec_lib.ARENA_BLOCK:       # defensive: all
                 res = res[:, :codec_lib.ARENA_BLOCK]        # layouts use 512
             for r, ((j, _), n) in enumerate(zip(items, n_arr)):

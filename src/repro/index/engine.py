@@ -79,6 +79,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import difflib
+import itertools
 import json
 import os
 import warnings
@@ -91,6 +92,8 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.kernels import intersect, intersect_rounds, topk
+from repro.obs.metrics import DevStatsView, MetricsRegistry
+from repro.obs.trace import get_tracer
 from .device import _bucket     # one shared jit-bucket policy with the arena
 from .invindex import InvertedIndex
 from .scores import B, K1, bm25_scores, topk_select  # noqa: F401  (B/K1 re-export)
@@ -456,6 +459,28 @@ class ExecutionPlan:
     ctx: object = dataclasses.field(default=None, repr=False, compare=False)
 
 
+# per-engine counter taxonomy (registered on every QueryEngine's registry;
+# the long-form semantics are documented inline in ``__init__`` below)
+_DEV_COUNTERS = (
+    ("worklist_refs", "raw (term, block) work-list references, pre-dedup"),
+    ("worklist_decodes", "deduped batched arena decodes actually issued"),
+    ("fallback_decodes", "per-block arena decodes outside the work-list"),
+    ("resident_rounds", "AND rounds run with candidates device-resident"),
+    ("cand_syncs", "per-round candidate downloads (0 on resident paths)"),
+    ("final_syncs", "end-of-batch result downloads (one per batch)"),
+    ("score_rounds", "ranked accumulate rounds run device-resident"),
+    ("score_syncs", "per-round score downloads (always 0 when resident)"),
+    ("blocks_pruned", "ranked work-list entries dropped by block-max"),
+    ("blocks_scored", "ranked work-list entries actually scored"),
+    ("blocks_dense", "entries served from the dense-bitmap representation"),
+    ("tomb_gates", "device live-bitmap gates applied (uploads, not syncs)"),
+    ("merge_syncs", "sharded ranked top-k merge collectives (one/batch)"),
+    ("collective_bytes", "wire bytes moved by the top-k merge collectives"),
+    ("shard_final_syncs", "per-shard end-of-batch result downloads"),
+)
+_ENGINE_SEQ = itertools.count()
+
+
 class QueryEngine:
     def __init__(self, idx: InvertedIndex, cache_blocks: int = 4096,
                  cache_score_terms: int = 512, device: bool = False,
@@ -484,14 +509,22 @@ class QueryEngine:
         #   top-k merges (the ONE collective per batch) and their wire bytes
         # shard_final_syncs: per-shard end-of-batch result downloads under
         #   sharded execution (each shard contributes one, like final_syncs)
-        self.dev_stats = {"worklist_refs": 0, "worklist_decodes": 0,
-                          "fallback_decodes": 0, "resident_rounds": 0,
-                          "cand_syncs": 0, "final_syncs": 0,
-                          "score_rounds": 0, "score_syncs": 0,
-                          "blocks_pruned": 0, "blocks_scored": 0,
-                          "blocks_dense": 0, "tomb_gates": 0,
-                          "merge_syncs": 0, "collective_bytes": 0,
-                          "shard_final_syncs": 0}
+        #
+        # The counters live in a typed MetricsRegistry (repro.obs.metrics);
+        # ``dev_stats`` is a read-only live view over it, so every existing
+        # read keeps working while Prometheus exposition and ``scoped()``
+        # delta sampling come from the registry.  Counts are per engine
+        # (sub-engines own their own registries), starting at zero — the
+        # same semantics as the old per-engine dict.
+        self.metrics = MetricsRegistry(
+            namespace="repro_index",
+            const_labels={"engine": f"q{next(_ENGINE_SEQ)}", "shard": ""})
+        for mname, mhelp in _DEV_COUNTERS:
+            self.metrics.counter(mname, mhelp)
+        self.dev_stats = DevStatsView(self.metrics,
+                                      tuple(n for n, _ in _DEV_COUNTERS))
+        self.tracer = get_tracer()   # process-global; disabled by default
+        self.trace_lane = "engine"   # sub-engines relabel to "shard<i>"
         self._shard_cfg = None     # doc-range sharded serving config
         self._sctx_cache: dict = {}  # (skey, lo, hi) -> shard _ExecCtx
         self._last_shard_cands = None  # debug: last ranked per-shard cands
@@ -610,7 +643,7 @@ class QueryEngine:
         if v is None:
             if self.arena is not None:
                 # cache-eviction stragglers outside the batched work-list
-                self.dev_stats["fallback_decodes"] += 1
+                self.metrics.inc("fallback_decodes")
                 v = self._arena_ctx(ctx).decode_blocks([(t, bi, field)])[0]
             elif field == 0:
                 v = ctx.gen.decode_block_ids(t, bi)
@@ -659,7 +692,7 @@ class QueryEngine:
                 continue
             seen.add(e)
             missing.append(e)
-        self.dev_stats["worklist_decodes"] += len(missing)
+        self.metrics.inc("worklist_decodes", len(missing))
         if not missing:
             return
         arena = self._arena_ctx(ctx)
@@ -791,7 +824,7 @@ class QueryEngine:
                          key=lambda t: gen.terms[t].df) for q in queries]
         for ts in qterms:               # raw seed-term block references,
             if ts:                      # pre-dedup (work-list metric)
-                self.dev_stats["worklist_refs"] += gen.n_blocks(ts[0])
+                self.metrics.inc("worklist_refs", gen.n_blocks(ts[0]))
         if self.arena is not None:
             self._prefetch_terms({ts[0] for ts in qterms if ts}, fields=(0,))
         cands = [self.term_ids(ts[0]) if ts else _EMPTY_U32 for ts in qterms]
@@ -808,7 +841,7 @@ class QueryEngine:
                 cut, sel = self._block_plan(t, cands[i])
                 fused = term_fused(t, sel)
                 plans[i] = (t, cut, sel, fused)
-                self.dev_stats["worklist_refs"] += len(sel)
+                self.metrics.inc("worklist_refs", len(sel))
                 if self.arena is not None and not fused:
                     worklist.extend((t, int(bi), 0) for bi in sel)
             if self.arena is not None:
@@ -820,7 +853,7 @@ class QueryEngine:
             if self.arena is not None:
                 # every active query's surviving candidates just landed on
                 # the host for the next round's block plan
-                self.dev_stats["cand_syncs"] += len(active)
+                self.metrics.inc("cand_syncs", len(active))
             r += 1
         return [c if o else c.copy() for c, o in zip(cands, owned)]
 
@@ -859,7 +892,7 @@ class QueryEngine:
                 missing.append(e)
             else:
                 out[e] = v
-        self.dev_stats["worklist_decodes"] += len(missing)
+        self.metrics.inc("worklist_decodes", len(missing))
         if missing:
             rows, ns = self._arena_ctx(ctx).decode_blocks_device(missing)
             for e, row, n in zip(missing, rows, ns):
@@ -988,7 +1021,7 @@ class QueryEngine:
         path consumes the bitmap directly and never downloads it)."""
         bm, _, _ = self._and_bitmap_resident(queries, terms, use_fused,
                                              qterms=qterms)
-        self.dev_stats["final_syncs"] += 1
+        self.metrics.inc("final_syncs")
         return intersect_rounds.extract_ids(np.asarray(bm)[:len(queries)],
                                             self._cur().gen.n_docs)
 
@@ -1070,7 +1103,7 @@ class QueryEngine:
             sparse, dense = [], []
             for e in pairs:
                 (dense if (e[1], e[2]) in ar.dense_slot else sparse).append(e)
-            self.dev_stats["blocks_dense"] += len(dense)
+            self.metrics.inc("blocks_dense", len(dense))
             return sparse, dense
 
         # round 0: seed every query's bitmap row with its rarest term
@@ -1078,16 +1111,22 @@ class QueryEngine:
                  if ts and idx.terms[ts[0]].df]
         for ts in qterms:               # raw seed-term block references,
             if ts:                      # pre-dedup (work-list metric)
-                self.dev_stats["worklist_refs"] += idx.n_blocks(ts[0])
+                self.metrics.inc("worklist_refs", idx.n_blocks(ts[0]))
         pairs0 = [(i, qterms[i][0], bi) for i in seeds
                   for bi in range(idx.n_blocks(qterms[i][0]))]
         plain0, dense0 = split_dense(pairs0)
-        bm = run_round(bm, plain0, [], dense0, seeds, probe=False)
+        with self.tracer.span("and/seed", lane=self.trace_lane, nq=nq,
+                              plain=len(plain0), dense=len(dense0)):
+            bm = run_round(bm, plain0, [], dense0, seeds, probe=False)
+            self.tracer.fence(bm)
         if ctx.mutated and len(ctx.dead):
             # gate the seed with the epoch's live row: every later round
             # only keeps survivors, so one AND suffices for the whole batch
-            bm = bm & ctx.live_dev(words)[None, :]
-            self.dev_stats["tomb_gates"] += 1
+            with self.tracer.span("and/tomb_gate", lane=self.trace_lane,
+                                  dead=len(ctx.dead)):
+                bm = bm & ctx.live_dev(words)[None, :]
+                self.tracer.fence(bm)
+            self.metrics.inc("tomb_gates")
         cov = {i: (idx.block_firsts(qterms[i][0]),
                    idx.block_lasts(qterms[i][0])) for i in seeds}
 
@@ -1097,24 +1136,29 @@ class QueryEngine:
             active = [i for i in live if len(qterms[i]) > r]
             if not active:
                 break
-            self.dev_stats["resident_rounds"] += 1
+            self.metrics.inc("resident_rounds")
             plain, fused_pairs, dense = [], [], []
             for i in active:
                 t = qterms[i][r]
                 sel = self._select_blocks_static(t, *cov[i])
-                self.dev_stats["worklist_refs"] += len(sel)
+                self.metrics.inc("worklist_refs", len(sel))
                 f = use_fused and (terms[t].fused if terms is not None
                                    else ar.has_fused(t, sel))
                 for bi in sel:
                     e = (i, t, int(bi))
                     if (t, int(bi)) in ar.dense_slot:
                         dense.append(e)
-                        self.dev_stats["blocks_dense"] += 1
+                        self.metrics.inc("blocks_dense")
                     elif f:
                         fused_pairs.append(e)
                     else:
                         plain.append(e)
-            bm = run_round(bm, plain, fused_pairs, dense, active, probe=True)
+            with self.tracer.span("and/round", lane=self.trace_lane, r=r,
+                                  plain=len(plain), fused=len(fused_pairs),
+                                  dense=len(dense)):
+                bm = run_round(bm, plain, fused_pairs, dense, active,
+                               probe=True)
+                self.tracer.fence(bm)
             r += 1
 
         return bm, qterms, cov
@@ -1452,7 +1496,7 @@ class QueryEngine:
         cand_bm = topk.candidate_bitmap(acc, member, theta,
                                         jnp.asarray(margins), iq_dev)
         # the single host copy: candidate bitmaps -> exact float rescore
-        self.dev_stats["final_syncs"] += 1
+        self.metrics.inc("final_syncs")
         cand = intersect_rounds.extract_ids(np.asarray(cand_bm)[:nq],
                                             idx.n_docs)
         return self._ranked_rescore(queries, cand, k, mode, known, ctx)
@@ -1523,8 +1567,11 @@ class QueryEngine:
         eff_gate = gate
         if gate is None and ctx.mutated and len(ctx.dead):
             # OR mode under deletes: the epoch's live row gates every lane
-            eff_gate = jnp.broadcast_to(ctx.live_dev(words), (nqp, words))
-            self.dev_stats["tomb_gates"] += 1
+            with self.tracer.span("ranked/tomb_gate", lane=self.trace_lane,
+                                  dead=len(ctx.dead)):
+                eff_gate = jnp.broadcast_to(ctx.live_dev(words),
+                                            (nqp, words))
+            self.metrics.inc("tomb_gates")
         gate_tiles = None
         if use_fused:       # the probe target of the fused rounds: the AND
             # bitmap (live-gated under mutation), the live row, or (OR mode,
@@ -1550,6 +1597,12 @@ class QueryEngine:
         iq_dev = jnp.asarray(iqs.astype(np.uint32))
         nrounds = max((len(ts) for ts in order), default=0)
         for r in range(nrounds):
+            # detached span (begin/end): covers work-list selection +
+            # block-max pruning + the round's kernel calls without
+            # re-indenting the loop body; decode/<codec> child spans nest
+            # under the thread's enclosing CM (engine/execute) instead
+            _rsp = self.tracer.begin("ranked/round", lane=self.trace_lane,
+                                     r=r, mode=mode)
             plain, fused_pairs, dense = [], [], []
             plain_ub, fused_ub, dense_ub = [], [], []
             for i in range(nq):
@@ -1563,8 +1616,8 @@ class QueryEngine:
                 else:
                     sel, pruned, ubs_i = (
                         self._select_blocks_static(t, *cov[i]), 0, None)
-                self.dev_stats["blocks_pruned"] += pruned
-                self.dev_stats["blocks_scored"] += len(sel)
+                self.metrics.inc("blocks_pruned", pruned)
+                self.metrics.inc("blocks_scored", len(sel))
                 f = use_fused and (terms[t].fused if terms is not None
                                    else ar.has_fused(t, sel))
                 for j, bi in enumerate(sel):
@@ -1574,14 +1627,14 @@ class QueryEngine:
                             and (t, int(bi)) in sa.dense_slot):
                         dense.append(e)
                         dense_ub.append(u)
-                        self.dev_stats["blocks_dense"] += 1
+                        self.metrics.inc("blocks_dense")
                     elif f:
                         fused_pairs.append(e)
                         fused_ub.append(u)
                     else:
                         plain.append(e)
                         plain_ub.append(u)
-            self.dev_stats["score_rounds"] += 1
+            self.metrics.inc("score_rounds")
             if plain:
                 rows, qs, ns, p = self._stack_worklist(plain)
                 codes = self._score_rows(sa, [(t, bi) for _, t, bi in plain],
@@ -1614,6 +1667,9 @@ class QueryEngine:
                 # full k — fewer pooled groups than k would over-promote)
                 theta_dev = jnp.maximum(theta_dev,
                                         topk.pooled_threshold(acc, k))
+            self.tracer.fence(acc)
+            self.tracer.end(_rsp, plain=len(plain), fused=len(fused_pairs),
+                            dense=len(dense))
         return acc, member, margins, iq_dev, width, words
 
     def _ranked_rescore(self, queries: list, cand: list, k: int, mode: str,
@@ -1623,18 +1679,21 @@ class QueryEngine:
         per-query delta-segment union + live-stat oracle.  ``cand`` holds
         GLOBAL sorted docids (sharded execution translates each shard's
         extraction by its range base before concatenating), so the tail is
-        bitwise identical either way."""
-        if not ctx.mutated:
-            return self._rescore_batch_blockwise(queries, cand, k)
-        out = []
-        for i, (q, c) in enumerate(zip(queries, cand)):
-            if mode == "or":
-                d = ctx.delta.scan_any(known[i])
-            else:
-                d = (ctx.delta.scan_and(known[i]) if known[i]
-                     else _EMPTY_U32)
-            out.append(self._score_docs(q, _merge_disjoint(c, d), k))
-        return out
+        bitwise identical either way.  Span ``ranked/rescore``."""
+        with self.tracer.span("ranked/rescore", lane=self.trace_lane,
+                              nq=len(queries), mode=mode,
+                              cands=sum(len(c) for c in cand)):
+            if not ctx.mutated:
+                return self._rescore_batch_blockwise(queries, cand, k)
+            out = []
+            for i, (q, c) in enumerate(zip(queries, cand)):
+                if mode == "or":
+                    d = ctx.delta.scan_any(known[i])
+                else:
+                    d = (ctx.delta.scan_and(known[i]) if known[i]
+                         else _EMPTY_U32)
+                out.append(self._score_docs(q, _merge_disjoint(c, d), k))
+            return out
 
     # ---- doc-range sharded execution ---------------------------------------- #
 
@@ -1684,6 +1743,8 @@ class QueryEngine:
                     eng = QueryEngine(sgen).to_device(fused=self._fused)
                     eng.arena.ensure_scores()
                 eng._shard_device = dev
+                eng.trace_lane = f"shard{s}"    # own Perfetto lane
+                eng.metrics.relabel(shard=f"s{s}")
                 engs.append(eng)
             cache[key] = got = (spec, engs)
         return got[0], got[1], mesh
@@ -1788,7 +1849,7 @@ class QueryEngine:
             with self._pinned(eng, sctx):
                 ids = eng._and_many_resident(queries, None, fused,
                                              qterms=sub_q)
-            self.dev_stats["shard_final_syncs"] += 1
+            self.metrics.inc("shard_final_syncs")
             for i, a in enumerate(ids):
                 if len(a):
                     per_q[i].append(a + np.uint32(lo))
@@ -1868,10 +1929,13 @@ class QueryEngine:
             th_parts.append(th)
             cnt_parts.append(cnt)
         from repro.distributed import collectives
-        theta_m, _, wire = collectives.merge_topk_stats(th_parts, cnt_parts,
-                                                        mesh=mesh)
-        self.dev_stats["merge_syncs"] += 1
-        self.dev_stats["collective_bytes"] += int(wire)
+        with self.tracer.span("sharded/merge", lane=self.trace_lane,
+                              shards=len(parts), nq=nq):
+            theta_m, _, wire = collectives.merge_topk_stats(th_parts,
+                                                            cnt_parts,
+                                                            mesh=mesh)
+        self.metrics.inc("merge_syncs")
+        self.metrics.inc("collective_bytes", int(wire))
         theta_dev = jnp.asarray(theta_m.astype(np.uint32))
         cand_parts = [[] for _ in queries]
         shard_cands = []
@@ -1879,7 +1943,7 @@ class QueryEngine:
             with self._pinned(eng, sctx):
                 bm = topk.candidate_bitmap(acc, member, theta_dev,
                                            jnp.asarray(margins), iq_dev)
-                self.dev_stats["shard_final_syncs"] += 1
+                self.metrics.inc("shard_final_syncs")
                 ids = intersect_rounds.extract_ids(np.asarray(bm)[:nq],
                                                    hi - lo)
             shard_cands.append(ids)
@@ -1895,6 +1959,14 @@ class QueryEngine:
 
     def plan(self, batch: QueryBatch,
              placement: Optional[str] = None) -> ExecutionPlan:
+        """Resolve a batch into a typed :class:`ExecutionPlan` (span
+        ``engine/plan``); see :meth:`_plan_impl` for the full contract."""
+        with self.tracer.span("engine/plan", lane=self.trace_lane,
+                              mode=batch.mode, nq=len(batch.queries)):
+            return self._plan_impl(batch, placement)
+
+    def _plan_impl(self, batch: QueryBatch,
+                   placement: Optional[str] = None) -> ExecutionPlan:
         """Resolve a batch into a typed :class:`ExecutionPlan`: placement
         (host / device / fused, following the engine's current arena state)
         plus every referenced term's codec capabilities, read once from the
@@ -1989,6 +2061,16 @@ class QueryEngine:
                              terms=terms, note=note, ctx=ctx)
 
     def execute(self, work) -> list:
+        """Run an :class:`ExecutionPlan` (span ``engine/execute``); see
+        :meth:`_execute_impl` for the full contract."""
+        if isinstance(work, QueryBatch):
+            work = self.plan(work)
+        with self.tracer.span("engine/execute", lane=self.trace_lane,
+                              mode=work.mode, placement=work.placement,
+                              nq=len(work.queries)):
+            return self._execute_impl(work)
+
+    def _execute_impl(self, work) -> list:
         """Run an :class:`ExecutionPlan`; results align with the planned
         queries.  Passing a ``QueryBatch`` is a deprecated shim that plans
         implicitly (bit-identical results).

@@ -49,6 +49,16 @@ oracle for bitwise parity (``benchmarks/bench_serving.py`` does exactly
 that).  The registry lint checks that every trace's stage timestamps are
 monotone non-decreasing.
 
+The same stage boundaries are recorded as spans on the server's always-on
+:class:`repro.obs.trace.Tracer` (``server.tracer``, also reachable as
+``stats.tracer`` from ``serve_stream`` callers): ``serve/request`` per
+request, ``serve/close`` per batch-forming window, and ``serve/batch``
+with ``serve/plan`` / ``serve/execute`` / ``serve/deliver`` children that
+tile it exactly.  ``repro.obs.trace.to_chrome_trace`` exports them (plus
+any enabled engine/kernel spans) as Perfetto-loadable JSON; aggregate
+counters live on ``stats.metrics`` with Prometheus text exposition via
+``stats.to_prometheus()``.
+
 SLO semantics: ``deadline_ms`` is a *relative* budget from enqueue.  A
 request is shed (``Rejected``) only when its deadline has already passed at
 admission or at batch close; a request that starts executing in time but
@@ -81,6 +91,9 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping, Optional
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry, nearest_rank
+from repro.obs.trace import Tracer
 
 from .device import _bucket
 from .engine import QueryBatch, QueryEngine, MODES
@@ -172,9 +185,12 @@ class BatchRecord:
 
 
 class ServerStats:
-    """Aggregated serving telemetry: every trace and batch record, counter
-    totals, and a ``snapshot()`` that derives the SLO metrics (latency
-    percentiles, goodput, shed rate, batch-size histogram per placement)."""
+    """Aggregated serving telemetry: every trace and batch record, a typed
+    :class:`~repro.obs.metrics.MetricsRegistry` (Prometheus exposition via
+    :meth:`to_prometheus`), and a ``snapshot()`` that derives the SLO
+    metrics (latency percentiles, goodput, shed rate, batch-size histogram
+    per placement).  ``tracer`` is the owning server's span tracer (set by
+    :class:`IndexServer`) so ``serve_stream`` callers can export traces."""
 
     def __init__(self):
         self.traces: list[TraceRecord] = []
@@ -186,6 +202,18 @@ class ServerStats:
         self.rejected_queue_full = 0
         self.per_tenant: dict = {}
         self.warmup_s = 0.0
+        self.tracer: Optional[Tracer] = None
+        self.metrics = MetricsRegistry(namespace="repro_serve")
+        self.metrics.counter(
+            "requests_total", "requests by tenant and outcome",
+            labelnames=("tenant", "outcome"))
+        self.metrics.counter(
+            "batches_total", "closed batches by placement and mode",
+            labelnames=("placement", "mode"))
+        self.metrics.histogram(
+            "request_latency_ms", "end-to-end served latency (ms)",
+            labelnames=("tenant",))
+        self.metrics.gauge("warmup_seconds", "server warm-up wall-clock")
 
     def _tenant(self, tenant: str) -> dict:
         d = self.per_tenant.get(tenant)
@@ -199,6 +227,11 @@ class ServerStats:
         t = self._tenant(tr.tenant)
         self.submitted += 1
         t["submitted"] += 1
+        self.metrics.inc("requests_total", tenant=tr.tenant,
+                         outcome=tr.outcome)
+        if tr.latency_ms is not None:
+            self.metrics.get("request_latency_ms").observe(
+                tr.latency_ms, tenant=tr.tenant)
         if tr.outcome == "served":
             self.served += 1
             t["served"] += 1
@@ -212,13 +245,34 @@ class ServerStats:
             self.rejected_queue_full += 1
             t["rejected"] += 1
 
-    def snapshot(self) -> dict:
+    def record_batch(self, b: BatchRecord) -> None:
+        self.batches.append(b)
+        self.metrics.inc("batches_total", placement=b.placement, mode=b.mode)
+
+    def set_warmup(self, seconds: float) -> None:
+        self.warmup_s = seconds
+        self.metrics.get("warmup_seconds").set(seconds)
+
+    def to_prometheus(self) -> str:
+        """The registry's Prometheus 0.0.4 text exposition (what
+        ``launch.serve --metrics-out`` writes)."""
+        return self.metrics.to_prometheus()
+
+    def snapshot(self, prometheus: bool = False) -> dict:
         """SLO metrics over everything recorded so far.  ``shed_rate``
         counts every non-served outcome (shed at close + both admission
         rejects); ``goodput_qps`` is on-time served requests per second of
-        stream wall-clock (first enqueue to last delivery)."""
-        lat = np.asarray([tr.latency_ms for tr in self.traces
-                          if tr.latency_ms is not None])
+        stream wall-clock (first enqueue to last delivery).
+
+        Latency percentiles use the nearest-rank rule
+        (:func:`repro.obs.metrics.nearest_rank`): deterministic for tiny
+        samples — never interpolated, always an observed value, monotone in
+        q (p50 <= p99 <= p999), and n == 1 returns the single sample.
+
+        With ``prometheus=True`` the snapshot also carries the registry's
+        text exposition under the ``"prometheus"`` key."""
+        lat = sorted(tr.latency_ms for tr in self.traces
+                     if tr.latency_ms is not None)
         on_time = sum(tr.on_time for tr in self.traces)
         if self.traces:
             t0 = min(tr.t_enqueue for tr in self.traces)
@@ -234,13 +288,15 @@ class ServerStats:
                 hist[b.placement].get(len(b.queries), 0) + 1)
         sizes = [len(b.queries) for b in self.batches]
         pct = {}
-        if len(lat):
+        if lat:
             for name, q in (("p50", 50.0), ("p99", 99.0), ("p999", 99.9)):
-                pct[name] = float(np.percentile(lat, q))
-            pct["mean"] = float(lat.mean())
-            pct["max"] = float(lat.max())
+                pct[name] = nearest_rank(lat, q)
+            pct["mean"] = float(sum(lat) / len(lat))
+            pct["max"] = float(lat[-1])
         dropped = self.shed + self.rejected_expired + self.rejected_queue_full
+        extra = {"prometheus": self.to_prometheus()} if prometheus else {}
         return {
+            **extra,
             "submitted": self.submitted,
             "served": self.served,
             "shed": self.shed,
@@ -353,6 +409,7 @@ class _Pending:
     fut: asyncio.Future
     t_enqueue: float
     deadline: float              # absolute
+    sp: object = None            # the request's serve/request span (detached)
 
 
 # --------------------------------------------------------------------------- #
@@ -369,6 +426,14 @@ class IndexServer:
         self.engine = engine
         self.config = config or ServeConfig()
         self.stats = ServerStats()
+        # the server's own always-on tracer: every TraceRecord stage stamp
+        # below is a boundary of one of these spans (serve/request,
+        # serve/close, serve/batch + plan/execute/deliver children), so the
+        # five-stamp record is a *view* over the span timeline, not a second
+        # clock.  Deep engine/kernel spans live on the process-global tracer
+        # (repro.obs.trace.get_tracer), disabled unless explicitly enabled.
+        self.tracer = Tracer(enabled=True)
+        self.stats.tracer = self.tracer
         self._queues: dict[str, list[_Pending]] = {}
         self._credit: dict[str, float] = {}
         self._queued = 0
@@ -390,7 +455,8 @@ class IndexServer:
         if cfg.placement is not None:
             if cfg.placement not in ("host", "device", "fused"):
                 raise ValueError(f"unknown placement {cfg.placement!r}")
-            if cfg.placement != "host" and self.engine.arena is None:
+            if (cfg.placement != "host" and self.engine.arena is None
+                    and getattr(self.engine, "_shard_cfg", None) is None):
                 raise ValueError(
                     f"placement {cfg.placement!r} needs device arenas; call "
                     f"engine.to_device() before starting the server")
@@ -431,7 +497,7 @@ class IndexServer:
         gen = getattr(eng.idx, "gen", eng.idx)
         hot = sorted(gen.terms, key=lambda t: -gen.terms[t].df)[:cfg.warm_terms]
         if not hot:
-            self.stats.warmup_s = _now() - t0
+            self.stats.set_warmup(_now() - t0)
             return
         if eng.arena is not None:
             eng._prefetch_terms(hot, fields=(0,))
@@ -464,7 +530,7 @@ class IndexServer:
                     eng.execute(eng.plan(QueryBatch(pool[i:i + step],
                                                     mode=mode, k=10),
                                          placement=cfg.placement))
-        self.stats.warmup_s = _now() - t0
+        self.stats.set_warmup(_now() - t0)
 
     # ---- admission ------------------------------------------------------- #
 
@@ -476,15 +542,20 @@ class IndexServer:
             raise ValueError(f"unknown mode {req.mode!r}; modes: {MODES}")
         loop = asyncio.get_running_loop()
         fut = loop.create_future()
-        t = _now()
         rid = self._rid
         self._rid += 1
+        # the request span opens here and its t0 IS the enqueue stamp — one
+        # clock read serves both the trace record and the span timeline
+        sp = self.tracer.begin("serve/request", lane="serve", rid=rid,
+                               tenant=req.tenant, mode=req.mode, k=req.k)
+        t = sp.t0
         budget = (self.config.default_deadline_ms
                   if req.deadline_ms is None else req.deadline_ms)
         deadline = t + budget / 1e3
         if budget <= 0:
             fut.set_result(Rejected("expired", req.tenant,
                                     f"deadline_ms={budget} already spent at enqueue"))
+            self.tracer.end(sp, t1=t, outcome="rejected_expired")
             self.stats.record(TraceRecord(
                 rid, req.tenant, req.mode, req.k, "rejected_expired",
                 deadline, t))
@@ -495,11 +566,12 @@ class IndexServer:
             fut.set_result(Rejected("queue_full", req.tenant,
                                     f"tenant share {len(q)}/{cap}, "
                                     f"global {self._queued}/{self.config.queue_cap}"))
+            self.tracer.end(sp, t1=t, outcome="rejected_queue_full")
             self.stats.record(TraceRecord(
                 rid, req.tenant, req.mode, req.k, "rejected_queue_full",
                 deadline, t))
             return fut
-        q.append(_Pending(rid, req, fut, t, deadline))
+        q.append(_Pending(rid, req, fut, t, deadline, sp))
         self._queued += 1
         if self._event is not None:
             self._event.set()
@@ -548,6 +620,8 @@ class IndexServer:
                 continue
             self._inflight = True
             try:
+                csp = self.tracer.begin("serve/close", lane="serve",
+                                        seed_rid=seed.rid)
                 batch = [seed]
                 key = (seed.req.mode, seed.req.k)
                 close_at = min(seed.deadline - cfg.slack_ms / 1e3,
@@ -569,6 +643,7 @@ class IndexServer:
                     except asyncio.TimeoutError:
                         break
                 t_close = _now()
+                self.tracer.end(csp, t1=t_close, n=len(batch))
                 live = []
                 for p in batch:
                     if p.deadline < t_close:        # shed: budget already spent
@@ -576,6 +651,7 @@ class IndexServer:
                             "deadline", p.req.tenant,
                             f"deadline passed {1e3 * (t_close - p.deadline):.2f}"
                             f" ms before batch close"))
+                        self.tracer.end(p.sp, t1=t_close, outcome="shed")
                         self.stats.record(TraceRecord(
                             p.rid, p.req.tenant, p.req.mode, p.req.k, "shed",
                             p.deadline, p.t_enqueue, t_close=t_close))
@@ -588,6 +664,7 @@ class IndexServer:
                         self._pool, self._run_batch, live, t_close)
                 except Exception as e:      # noqa: BLE001 — fail the batch's futures
                     for p in live:
+                        self.tracer.end(p.sp, outcome="error")
                         if not p.fut.done():
                             p.fut.set_exception(
                                 RuntimeError(f"batch execution failed: {e!r}"))
@@ -602,31 +679,54 @@ class IndexServer:
 
     def _run_batch(self, live: list, t_close: float):
         """Executor-thread half of one batch: plan, (optional test hook),
-        execute, stamp the remaining trace stages."""
+        execute, stamp the remaining trace stages.
+
+        The stage stamps ARE span boundaries: ``serve/batch`` runs
+        ``t_close -> t_done`` with children ``serve/plan`` (close -> plan
+        done), ``serve/execute`` (plan -> execute done) and
+        ``serve/deliver`` (execute -> done) tiling it exactly — the
+        exported trace accounts for 100% of measured batch wall-clock, and
+        the :class:`TraceRecord` five-stamp view is derived from the same
+        clock reads."""
         cfg = self.config
         queries = [list(p.req.terms) for p in live]
         mode, k = live[0].req.mode, live[0].req.k
-        plan = self.engine.plan(QueryBatch(queries, mode=mode, k=k),
-                                placement=cfg.placement)
-        t_plan = _now()
-        if self._after_plan is not None:
-            self._after_plan(plan)
-        results = self.engine.execute(plan)
-        t_execute = _now()
-        epoch = plan.ctx.skey if plan.ctx is not None else ()
         bid = self._batch_id
         self._batch_id += 1
-        t_done = _now()
-        self.stats.batches.append(BatchRecord(
+        bsp = self.tracer.begin("serve/batch", lane="serve", t0=t_close,
+                                bid=bid, mode=mode, k=k, nq=len(live))
+        psp = self.tracer.begin("serve/plan", lane="serve", parent=bsp,
+                                t0=t_close)
+        plan = self.engine.plan(QueryBatch(queries, mode=mode, k=k),
+                                placement=cfg.placement)
+        self.tracer.end(psp, placement=plan.placement)
+        t_plan = psp.t1
+        if self._after_plan is not None:
+            self._after_plan(plan)
+        esp = self.tracer.begin("serve/execute", lane="serve", parent=bsp,
+                                t0=t_plan)
+        results = self.engine.execute(plan)
+        self.tracer.end(esp)
+        t_execute = esp.t1
+        dsp = self.tracer.begin("serve/deliver", lane="serve", parent=bsp,
+                                t0=t_execute)
+        epoch = plan.ctx.skey if plan.ctx is not None else ()
+        self.tracer.end(dsp)
+        t_done = dsp.t1
+        self.tracer.end(bsp, t1=t_done, placement=plan.placement)
+        self.stats.record_batch(BatchRecord(
             bid, mode, k, plan.placement, epoch,
             tuple(tuple(q) for q in queries), tuple(p.rid for p in live),
             t_close, t_plan, t_execute, t_done))
-        records = [TraceRecord(
-            p.rid, p.req.tenant, mode, k, "served", p.deadline, p.t_enqueue,
-            t_close=t_close, t_plan=t_plan, t_execute=t_execute,
-            t_done=t_done, batch_id=bid, batch_size=len(live),
-            placement=plan.placement, epoch=epoch,
-            on_time=t_done <= p.deadline) for p in live]
+        records = []
+        for p in live:
+            self.tracer.end(p.sp, t1=t_done, outcome="served", bid=bid)
+            records.append(TraceRecord(
+                p.rid, p.req.tenant, mode, k, "served", p.deadline,
+                p.t_enqueue, t_close=t_close, t_plan=t_plan,
+                t_execute=t_execute, t_done=t_done, batch_id=bid,
+                batch_size=len(live), placement=plan.placement, epoch=epoch,
+                on_time=t_done <= p.deadline))
         return results, records
 
 

@@ -273,6 +273,9 @@ def segmented_decode_and(tiles, slots, qslots, firsts, ns, cand_tiles,
 
 def extract_ids(bm_np: np.ndarray, n_docs: int) -> list:
     """Bitmap rows -> sorted uint32 docid arrays (fresh, caller-owned)."""
-    bits = np.unpackbits(np.ascontiguousarray(bm_np).view(np.uint8),
-                         axis=1, bitorder="little")[:, :n_docs]
-    return [np.flatnonzero(b).astype(np.uint32) for b in bits]
+    from repro.obs.trace import get_tracer
+    with get_tracer().span("kernel/extract_ids", lane="device",
+                           rows=int(bm_np.shape[0]), n_docs=n_docs):
+        bits = np.unpackbits(np.ascontiguousarray(bm_np).view(np.uint8),
+                             axis=1, bitorder="little")[:, :n_docs]
+        return [np.flatnonzero(b).astype(np.uint32) for b in bits]

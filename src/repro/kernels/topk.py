@@ -168,13 +168,20 @@ def _kth_descend(vals, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def topk_threshold(acc, k: int):
-    """Per-query threshold theta: the k-th largest accumulated code sum."""
+def _topk_threshold_jit(acc, k: int):
     return _kth_descend(acc, k)
 
 
+def topk_threshold(acc, k: int):
+    """Per-query threshold theta: the k-th largest accumulated code sum."""
+    from repro.obs.trace import get_tracer
+    with get_tracer().span("kernel/topk", lane="device", k=k,
+                           nq=int(acc.shape[0])):
+        return _topk_threshold_jit(acc, k)
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
-def topk_stats(acc, k: int):
+def _topk_stats_jit(acc, k: int):
     """Per-query (theta, count) merge statistics for doc-range sharded top-k.
 
     theta is the shard-local k-th largest accumulated sum — with the RAW k,
@@ -195,6 +202,14 @@ def topk_stats(acc, k: int):
     count = jnp.sum(acc >= jnp.maximum(theta, 1)[:, None], axis=1,
                     dtype=jnp.int32)
     return theta, count
+
+
+def topk_stats(acc, k: int):
+    """Traced wrapper over :func:`_topk_stats_jit` (same contract)."""
+    from repro.obs.trace import get_tracer
+    with get_tracer().span("kernel/topk", lane="device", k=k,
+                           nq=int(acc.shape[0]), stats=True):
+        return _topk_stats_jit(acc, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -29,13 +29,21 @@ def serve_index(args) -> None:
     :class:`~repro.index.serve.IndexServer`, drive an open-loop Poisson
     stream through it, and print the SLO snapshot.  ``--smoke`` shrinks the
     stream to CI size and asserts nothing was shed."""
+    import json
+
     from repro.data import synth
     from repro.index.invindex import InvertedIndex
     from repro.index.engine import QueryEngine
     from repro.index.serve import (Rejected, Request, ServeConfig,
                                    poisson_offsets, serve_stream)
+    from repro.obs import (enable_tracing, get_tracer, to_chrome_trace,
+                           trace_coverage)
 
     n = 32 if args.smoke else args.requests
+    if args.trace_out:
+        # deep engine/kernel spans ride the process-global tracer; the
+        # server's lifecycle spans are always on (server-owned tracer)
+        enable_tracing(True, fenced=args.fenced)
     doclen, postings = synth.make_corpus(args.dataset, args.seed)
     idx = InvertedIndex.build(doclen, postings)
     idx.to_device(build_fused=True)
@@ -65,6 +73,26 @@ def serve_index(args) -> None:
     print(f"latency ms: p50={lat.get('p50', 0):.2f} p99={lat.get('p99', 0):.2f} "
           f"p999={lat.get('p999', 0):.2f}  goodput={snap['goodput_qps']:.1f} qps  "
           f"mean_batch={snap['mean_batch']:.1f}  warmup={snap['warmup_s']:.2f}s")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(stats.to_prometheus())
+        print(f"wrote prometheus metrics to {args.metrics_out}")
+    if args.trace_out:
+        trace = to_chrome_trace(stats.tracer, get_tracer())
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        cov = trace_coverage(stats.tracer.spans())
+        print(f"wrote {len(trace['traceEvents'])} trace events to "
+              f"{args.trace_out} (batch coverage {cov:.3f}) — load at "
+              f"https://ui.perfetto.dev")
+        if args.smoke:
+            # the exported trace must round-trip as JSON and the
+            # plan/execute/deliver children must account for >= 90% of
+            # measured batch wall-clock
+            with open(args.trace_out) as f:
+                assert json.load(f)["traceEvents"], "empty trace export"
+            assert cov >= 0.9, f"trace covers {cov:.3f} < 0.9 of batch time"
+        enable_tracing(False)
     if args.smoke:
         shed = [r for r in results if isinstance(r, Rejected)]
         assert not shed, f"smoke stream shed {len(shed)} requests: {shed[:3]}"
@@ -93,6 +121,17 @@ def main() -> None:
                     choices=["host", "device", "fused"],
                     help="index mode: pin every batch's placement "
                          "(default: engine auto-placement)")
+    ap.add_argument("--trace-out", default=None,
+                    help="index mode: write a Perfetto-loadable Chrome "
+                         "trace-event JSON of the run (also enables the "
+                         "deep engine/kernel spans)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="index mode: write the server's Prometheus text "
+                         "exposition to this file after the stream")
+    ap.add_argument("--fenced", action="store_true",
+                    help="with --trace-out: block_until_ready inside round "
+                         "spans so durations attribute device wall-clock "
+                         "to the producing kernel")
     args = ap.parse_args()
 
     if args.index:

@@ -1,0 +1,45 @@
+"""Unified observability: span tracing, typed metrics, perf-regression gate.
+
+The serving stack spans admission -> batcher -> plan -> resident rounds ->
+collectives -> rescore across shards and placements; this package is the one
+place all of it reports to:
+
+``obs.trace``
+    Lightweight span tracer (context-manager API, monotonic clocks,
+    parent/child nesting, thread-safe) plus a Chrome trace-event exporter —
+    ``to_chrome_trace()`` output loads directly in Perfetto.  Deep engine /
+    kernel spans follow the process-global tracer (disabled by default; the
+    disabled path is a single attribute check), while ``IndexServer`` keeps
+    its own always-on tracer for the request lifecycle — the five-stamp
+    ``TraceRecord`` is a view over those spans.
+
+``obs.metrics``
+    Typed counter / gauge / histogram registry with ``(engine, shard,
+    placement, mode, codec)`` labels, Prometheus text exposition, and
+    ``scoped()`` delta sampling.  ``QueryEngine.dev_stats`` is a read-only
+    compatibility view over the engine's registry.
+
+``obs.regress``
+    The CI perf-regression gate: diff freshly produced ``BENCH_*.json``
+    reports against the committed baselines with per-metric tolerances and
+    hard invariants (driven by ``tools/bench_gate.py``).
+
+See ``repro/index/__init__.py`` for the full observability walkthrough
+(span taxonomy, metric names, opening a trace in Perfetto, gate tolerances).
+"""
+
+from .trace import (Span, Tracer, get_tracer, set_tracer, enable_tracing,
+                    to_chrome_trace, trace_coverage)
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      DevStatsView, nearest_rank, LABEL_KEYS)
+from .regress import (GateResult, Violation, compare_reports,
+                      check_invariants, run_gate, synthesize_regression)
+
+__all__ = [
+    "Span", "Tracer", "get_tracer", "set_tracer", "enable_tracing",
+    "to_chrome_trace", "trace_coverage",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "DevStatsView",
+    "nearest_rank", "LABEL_KEYS",
+    "GateResult", "Violation", "compare_reports", "check_invariants",
+    "run_gate", "synthesize_regression",
+]

@@ -128,9 +128,10 @@ def test_zero_cross_shard_syncs_and_one_merge_per_ranked_batch():
     idx = _build()
     sh = QueryEngine(idx).to_device(shards=4)
     b = QueryBatch([list(q) for q in QUERIES], mode="or", k=10)
-    sh.execute(sh.plan(b, placement="device"))
-    assert sh.dev_stats["merge_syncs"] == 1         # ONE collective per batch
-    assert sh.dev_stats["collective_bytes"] > 0
+    with sh.metrics.scoped() as sample:
+        sh.execute(sh.plan(b, placement="device"))
+    assert sample.delta("merge_syncs") == 1         # ONE collective per batch
+    assert sample.delta("collective_bytes") > 0
     spec, engs, _ = sh._shard_engines(sh._ctx_now())
     live = [e for e in engs if e is not None]
     assert live and spec.n_shards == 4
@@ -138,10 +139,11 @@ def test_zero_cross_shard_syncs_and_one_merge_per_ranked_batch():
         assert eng.dev_stats["cand_syncs"] == 0
         assert eng.dev_stats["score_syncs"] == 0
     # each non-empty shard contributes exactly one final bitmap download
-    assert sh.dev_stats["shard_final_syncs"] == len(live)
-    sh.execute(sh.plan(QueryBatch([[0, 1], [2, 3]], mode="and"),
-                       placement="device"))
-    assert sh.dev_stats["merge_syncs"] == 1         # AND merges nothing
+    assert sample.delta("shard_final_syncs") == len(live)
+    with sh.metrics.scoped() as sample:
+        sh.execute(sh.plan(QueryBatch([[0, 1], [2, 3]], mode="and"),
+                           placement="device"))
+    assert sample.delta("merge_syncs") == 0         # AND merges nothing
 
 
 def test_plan_note_records_shard_topology():

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the committed ``BENCH_*.json`` baselines.
+
+Usage (what ``.github/workflows/ci.yml`` runs)::
+
+    # stash the committed baselines before the bench smoke overwrites them
+    mkdir -p /tmp/bench_baseline
+    cp BENCH_query.json BENCH_mutation.json BENCH_serving.json \
+       BENCH_tolerances.json /tmp/bench_baseline/
+    PYTHONPATH=src python benchmarks/run.py --smoke      # fresh reports
+    PYTHONPATH=src python tools/bench_gate.py \
+        --fresh-dir . --baseline-dir /tmp/bench_baseline
+    PYTHONPATH=src python tools/bench_gate.py \
+        --fresh-dir . --baseline-dir /tmp/bench_baseline --self-test
+
+Exit status: 0 = gate passed, 1 = violations, 2 = usage/setup error.
+
+``--self-test`` proves the gate has teeth without waiting for a real
+regression: for each artifact it (a) gates the fresh report against itself
+(must pass — same numbers, ratio 1.0) and (b) synthesizes a 2x qps
+regression (every ratio-gated leaf halved) and asserts the gate FAILS it.
+A tolerance floor that quietly drifted above 1.0 or below 0.5 breaks the
+self-test immediately.
+
+Tolerances live in ``BENCH_tolerances.json`` next to the baselines — see
+``repro.obs.regress`` for the format and the hard-invariant list.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.obs import regress  # noqa: E402
+
+
+def self_test(fresh_dir: str, tolerances_path: str) -> int:
+    """Prove the gate passes identity and fails a synthetic 2x regression."""
+    tol = regress.load_tolerances(tolerances_path)
+    tested = 0
+    for kind, fname, stamp_keys in regress.ARTIFACTS:
+        path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(path):
+            continue
+        report = regress.load_report(path)
+        # (a) identity must pass: fresh vs itself is ratio 1.0 everywhere
+        v, n = regress.compare_reports(kind, report, report, tol)
+        if v:
+            print(f"self-test FAIL [{kind}]: identity comparison violated:")
+            for x in v:
+                print(f"  {x}")
+            return 1
+        if n == 0:
+            print(f"self-test FAIL [{kind}]: no ratio-gated metrics found "
+                  f"in {fname} — the gate would never catch a regression")
+            return 1
+        # (b) a synthetic 2x regression must fail
+        regressed = regress.synthesize_regression(report, factor=0.5)
+        v, _ = regress.compare_reports(kind, regressed, report, tol)
+        if not v:
+            print(f"self-test FAIL [{kind}]: a synthetic 2x qps regression "
+                  f"passed the gate — tolerances have no teeth "
+                  f"(min_ratio must stay above 0.5)")
+            return 1
+        print(f"self-test ok [{kind}]: {n} metric(s) gated, identity "
+              f"passes, 2x regression raises {len(v)} violation(s)")
+        tested += 1
+    if not tested:
+        print(f"self-test FAIL: no BENCH_*.json reports in {fresh_dir}")
+        return 2
+    print("bench-gate self-test passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh BENCH_*.json reports against committed "
+                    "baselines (tolerances + hard invariants)")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding freshly produced BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=_ROOT,
+                    help="directory holding the committed baselines "
+                         "(default: repo root)")
+    ap.add_argument("--tolerances", default=None,
+                    help="tolerances JSON (default: BENCH_tolerances.json "
+                         "in --baseline-dir)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate passes identity and fails a "
+                         "synthetic 2x qps regression, then exit")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the gate result as JSON")
+    args = ap.parse_args()
+
+    tol_path = args.tolerances or os.path.join(args.baseline_dir,
+                                               regress.TOLERANCES_FILE)
+    if args.self_test:
+        return self_test(args.fresh_dir, tol_path)
+
+    res = regress.run_gate(args.fresh_dir, args.baseline_dir, tol_path)
+    print(res.summary())
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"passed": res.passed,
+                       "checked_ratios": res.checked_ratios,
+                       "checked_invariants": res.checked_invariants,
+                       "violations": [vars(v) for v in res.violations]},
+                      f, indent=2, sort_keys=True)
+    if res.checked_ratios == 0 and res.checked_invariants == 0:
+        print("bench gate: nothing checked (no baselines found?)",
+              file=sys.stderr)
+        return 2
+    return 0 if res.passed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,11 @@ Checks, per registered codec:
      postings are bit-identical to the parent slice (translated by -lo,
      union over shards == the parent), and its quantized impact codes and
      block-max tables equal the parent's at the same (term, global doc) —
-     the statistics fixup the margin-preserving top-k merge depends on.
+     the statistics fixup the margin-preserving top-k merge depends on;
+ 11. metrics-registry discipline (``repro.obs.metrics``): snake_case metric
+     names, labels drawn from the fixed ``LABEL_KEYS`` vocabulary,
+     duplicate registration raising, and an identical metric schema
+     (name -> kind + label set) across engine instances.
 
 Run: PYTHONPATH=src python tools/registry_lint.py
 """
@@ -494,6 +498,69 @@ def lint_serving_traces(errors: list) -> None:
                           f"stage timestamps {s}")
 
 
+def lint_metrics(errors: list) -> None:
+    """Metrics-registry discipline (``repro.obs.metrics``): every metric
+    name is snake_case, every label is drawn from the fixed
+    ``LABEL_KEYS`` vocabulary, duplicate registration raises, and the
+    metric schema (name -> kind + label set) is identical across engine
+    instances — two engines exposing the same counter with different
+    label sets would make their expositions un-joinable."""
+    import re
+
+    from repro.index.engine import QueryEngine
+    from repro.index.invindex import InvertedIndex
+    from repro.index.serve import ServerStats
+    from repro.obs.metrics import LABEL_KEYS, MetricsRegistry
+
+    rng = np.random.default_rng(7)
+    n_docs = 2000
+    postings = {}
+    for t, df in enumerate([50, 200, 400]):
+        ids = np.sort(rng.choice(n_docs, df, replace=False)).astype(np.uint32)
+        postings[t] = (ids, rng.geometric(0.4, df).astype(np.uint32))
+    doclen = rng.integers(30, 300, n_docs).astype(np.int64)
+    idx = InvertedIndex.build(doclen, postings)
+    regs = [("engine-a", QueryEngine(idx).metrics),
+            ("engine-b", QueryEngine(idx).metrics),
+            ("server", ServerStats().metrics)]
+
+    snake = re.compile(r"^[a-z][a-z0-9_]*$")
+    for owner, reg in regs:
+        for name, m in reg.metrics().items():
+            if not snake.match(name):
+                _fail(errors, f"metrics: {owner} metric {name!r} is not "
+                              f"snake_case")
+            bad = set(m.labelnames) - set(LABEL_KEYS)
+            if bad:
+                _fail(errors, f"metrics: {owner} metric {name!r} labelled "
+                              f"outside the vocabulary: {sorted(bad)}")
+        bad = set(reg.const_labels) - set(LABEL_KEYS)
+        if bad:
+            _fail(errors, f"metrics: {owner} const labels outside the "
+                          f"vocabulary: {sorted(bad)}")
+
+    # same metric schema (kind + label set) on every engine instance
+    sa, sb = regs[0][1].schema(), regs[1][1].schema()
+    if sa != sb:
+        drift = {k for k in sa.keys() | sb.keys() if sa.get(k) != sb.get(k)}
+        _fail(errors, f"metrics: engine metric schemas drift across "
+                      f"instances: {sorted(drift)}")
+
+    # duplicate registration must raise, in-vocabulary enforcement must hold
+    reg = MetricsRegistry(namespace="lint")
+    reg.counter("dup_probe")
+    try:
+        reg.counter("dup_probe")
+        _fail(errors, "metrics: duplicate registration did not raise")
+    except ValueError:
+        pass
+    try:
+        reg.counter("bad_labels", labelnames=("no_such_label",))
+        _fail(errors, "metrics: out-of-vocabulary label did not raise")
+    except ValueError:
+        pass
+
+
 def main() -> int:
     errors: list = []
     lint_protocol(errors)
@@ -505,6 +572,7 @@ def main() -> int:
     lint_bitmap_blocks(errors)
     lint_shards(errors)
     lint_serving_traces(errors)
+    lint_metrics(errors)
     n_arena = sum(codec.get(n).arena is not None for n in codec.names())
     n_jax = sum(codec.get(n).jax is not None for n in codec.names())
     print(f"registry lint: {len(codec.names())} codecs "
